@@ -1,0 +1,50 @@
+"""Fig. 7 benchmark: (a) output-bit-precision sweep, (b) channel/kernel
+sweep — deviation + bandwidth trade-off curves from the deployable P²M
+layer (the accuracy version of this sweep is `examples/train_vww_p2m.py
+--sweep`, which trains; this harness stays seconds-fast)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.bandwidth import FirstLayerGeom, bandwidth_reduction
+from repro.core.bn_fold import deploy_params
+from repro.core.p2m_conv import (
+    P2MConvConfig,
+    apply_p2m_conv_deploy,
+    init_p2m_conv,
+    init_p2m_state,
+)
+from repro.core.quant import QuantSpec, quantize_deploy
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (4, 80, 80, 3))
+
+    # (a) output bit sweep {4,6,8,16,32}: deviation vs fp reference
+    cfg = P2MConvConfig()
+    params = init_p2m_conv(key, cfg)
+    state = init_p2m_state(cfg)
+    dep = deploy_params(params, state, cfg)
+    ref = apply_p2m_conv_deploy(dep, imgs, cfg, quantize=False, use_pallas=False)
+    for bits in (32, 16, 8, 6, 4):
+        cfgq = P2MConvConfig(n_bits=min(bits, 16))  # counter ≤ 16 bits
+        depq = quantize_deploy(dep, QuantSpec(w_bits=min(bits, 8),
+                                              out_bits=min(bits, 16)))
+        out = apply_p2m_conv_deploy(depq, imgs, cfgq, quantize=(bits < 32),
+                                    use_pallas=False)
+        dev = float(jnp.abs(out - ref).mean())
+        emit(f"fig7a_Nb{bits}", 0.0,
+             f"mean|Δ|={dev:.5f} BR={bandwidth_reduction(FirstLayerGeom(out_bits=min(bits,16))):.1f}x")
+
+    # (b) channels × kernel/stride sweep: bandwidth vs capacity proxy
+    for c_o in (4, 8, 16, 32):
+        for k in (3, 5, 7):
+            g = FirstLayerGeom(kernel=k, stride=k, out_channels=c_o)
+            cfg_b = P2MConvConfig(kernel=k, stride=k, out_channels=c_o)
+            weights = init_p2m_conv(jax.random.PRNGKey(2), cfg_b)["theta"]
+            emit(f"fig7b_c{c_o}_k{k}", 0.0,
+                 f"BR={bandwidth_reduction(g):.1f}x out={g.out_spatial}^2x{c_o} "
+                 f"w_per_pixel={c_o}")

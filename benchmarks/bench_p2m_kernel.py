@@ -1,0 +1,57 @@
+"""P²M kernel benchmark: elementwise oracle vs basis-decomposed XLA vs
+Pallas (interpret) — the measurable side of the TPU adaptation
+(DESIGN.md §2).  The jnp-basis/oracle speedup on CPU is the same
+matmul-vs-elementwise restructuring that maps onto the MXU on TPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.adc import ADCConfig
+from repro.core.pixel_model import default_pixel_model, prune_pixel_model
+from repro.kernels.p2m_conv import p2m_matmul, p2m_matmul_jnp, p2m_matmul_ref
+
+ADC = ADCConfig()
+
+# (M, K, N): paper geometry per image = 112·112 patches × 75 × 8
+CASES = [
+    ("paper_1img", 112 * 112, 75, 8),
+    ("paper_8img", 8 * 112 * 112, 75, 8),
+    ("wide_64ch", 4096, 75, 64),
+    ("big_patch", 4096, 147, 32),  # 7×7×3 kernel
+]
+
+
+def run() -> None:
+    model = default_pixel_model()
+    for name, m, k, n in CASES:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.random((m, k)), jnp.float32)
+        w = jnp.asarray(rng.uniform(-1, 1, (k, n)), jnp.float32)
+        s = jnp.zeros((n,), jnp.float32)
+
+        jnp_fn = jax.jit(lambda x, w, s: p2m_matmul_jnp(x, w, s, model, ADC, "quant"))
+        t_basis = timeit(jnp_fn, x, w, s)
+        emit(f"p2m_basis_{name}", t_basis,
+             f"M={m} K={k} N={n} (dw*dx matmuls, XLA)")
+
+        pruned = prune_pixel_model(model, 0.06)
+        pr_fn = jax.jit(lambda x, w, s: p2m_matmul_jnp(x, w, s, pruned, ADC, "quant"))
+        t_pr = timeit(pr_fn, x, w, s)
+        emit(f"p2m_pruned4_{name}", t_pr,
+             f"4-term basis (EXPERIMENTS.md SPerf A.2); {t_basis / t_pr:.2f}x vs 9-term")
+
+        if m <= 16384:
+            ref_fn = jax.jit(lambda x, w: p2m_matmul_ref(x, w, model, s, ADC,
+                                                         quantize=True))
+            t_ref = timeit(ref_fn, x, w, warmup=1, iters=3)
+            emit(f"p2m_elementwise_{name}", t_ref,
+                 f"oracle; basis_speedup={t_ref / t_basis:.1f}x")
+
+        if m <= 16384:
+            pl_fn = lambda x, w, s: p2m_matmul(x, w, s, model, ADC, "quant")
+            t_pl = timeit(pl_fn, x, w, s, warmup=1, iters=3)
+            emit(f"p2m_pallas_interpret_{name}", t_pl,
+                 "kernel body in interpret mode (correctness path)")

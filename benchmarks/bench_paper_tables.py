@@ -1,0 +1,67 @@
+"""Paper-table benchmarks: Eq. 2 bandwidth, Table 2 model costs,
+Tables 4-5 / Fig. 8 EDP — analytic recomputation + timing of the
+evaluators themselves."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.bandwidth import FirstLayerGeom, bandwidth_reduction
+from repro.core.energy import (
+    BASELINE_C_ENERGY,
+    BASELINE_DELAY,
+    BASELINE_NC_ENERGY,
+    N_PIX_BASELINE_C,
+    N_PIX_BASELINE_NC,
+    N_PIX_P2M,
+    P2M_DELAY,
+    P2M_ENERGY,
+    evaluate_model,
+    total_macs,
+)
+from repro.models.mobilenetv2 import MNV2Config, layer_census, peak_activation_bytes
+
+
+def run() -> None:
+    # ---- Eq. 2-3 (bandwidth) ----
+    geom = FirstLayerGeom()
+    emit("eq2_bandwidth_reduction", 0.0,
+         f"BR={bandwidth_reduction(geom):.2f}x (paper ~21x; Eq.2 w/ Table 1)")
+    for bits in (4, 6, 8, 16, 32):
+        g = FirstLayerGeom(out_bits=bits)
+        emit(f"eq2_bandwidth_Nb{bits}", 0.0, f"BR={bandwidth_reduction(g):.2f}x")
+
+    # ---- Table 2 (MAdds / peak memory) ----
+    paper = {("baseline", 560): (1.93, 7.53), ("p2m", 560): (0.27, 0.30),
+             ("baseline", 225): (0.31, 1.2), ("p2m", 225): (0.05, 0.049),
+             ("baseline", 115): (0.09, 0.311), ("p2m", 115): (0.01, 0.013)}
+    for (variant, res), (pm, pp) in paper.items():
+        cfg = MNV2Config(variant=variant, image_size=res)
+        madds = total_macs(layer_census(cfg)) / 1e9
+        peak = peak_activation_bytes(cfg, fused_blocks=(variant == "p2m")) / 1e6
+        emit(f"table2_{variant}_{res}", 0.0,
+             f"MAdds={madds:.3f}G(paper {pm}) peak={peak:.3f}MB(paper {pp})")
+
+    base = MNV2Config(variant="baseline", image_size=560)
+    p2m = MNV2Config(variant="p2m", image_size=560)
+    emit("table2_ratios", 0.0,
+         f"madds_red={total_macs(layer_census(base))/total_macs(layer_census(p2m)):.2f}x"
+         f"(paper 7.15x) peak_red="
+         f"{peak_activation_bytes(base, fused_blocks=False)/peak_activation_bytes(p2m, fused_blocks=True):.1f}x"
+         f"(paper 25.1x)")
+
+    # ---- Tables 4-5 / Fig. 8 (EDP) ----
+    rp = evaluate_model(layer_census(p2m), N_PIX_P2M, P2M_ENERGY, P2M_DELAY)
+    rb = evaluate_model(layer_census(base), N_PIX_BASELINE_C,
+                        BASELINE_C_ENERGY, BASELINE_DELAY)
+    # NC baseline: standard stride-2 first layer, rest identical (paper's
+    # 560→279 scenario) — approximate with the same census, NC constants.
+    rn = evaluate_model(layer_census(base), N_PIX_BASELINE_NC,
+                        BASELINE_NC_ENERGY, BASELINE_DELAY)
+    emit("fig8_energy_uj", 0.0,
+         f"p2m={rp.energy_uj:.0f} baseC={rb.energy_uj:.0f} baseNC={rn.energy_uj:.0f} "
+         f"ratio={rb.energy_uj/rp.energy_uj:.2f}x (paper <=7.81x)")
+    emit("fig8_delay_ms", 0.0,
+         f"p2m={rp.delay_sequential_ms:.1f} base={rb.delay_sequential_ms:.1f} "
+         f"ratio={rb.delay_sequential_ms/rp.delay_sequential_ms:.2f}x (paper <=2.15x)")
+    emit("fig8_edp", 0.0,
+         f"seq={rb.edp_sequential/rp.edp_sequential:.2f}x (paper 16.76x) "
+         f"cons={rb.edp_conservative/rp.edp_conservative:.2f}x (paper ~11x)")

@@ -1,0 +1,60 @@
+"""Wall-clock benchmarks (CPU, reduced configs): P²M-MobileNetV2 train
+step (the paper's workload — the §Perf measured-iteration target),
+smoke-LM train step, and decode throughput."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_smoke_config
+from repro.data import SyntheticVWW
+from repro.models.families import get_family
+from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+from repro.optim import constant, sgd
+from repro.train import TrainState, make_train_step
+from repro.train.vision import make_vww_train_step
+
+
+def run() -> None:
+    # ---- paper workload: P²M MNv2 train step (80×80 synthetic VWW) ----
+    for variant in ("p2m", "baseline"):
+        cfg = MNV2Config(variant=variant, image_size=80, width=0.25,
+                         head_channels=64)
+        params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
+        opt = sgd(constant(0.05), momentum=0.9)
+        state = {"params": params, "bn": bn, "opt": opt.init(params),
+                 "step": jnp.asarray(0, jnp.int32)}
+        step = jax.jit(make_vww_train_step(cfg, opt))
+        batch = SyntheticVWW(image_size=80, batch=16).batch_at(0)
+        t = timeit(lambda s, b: step(s, b)[0], state, batch)
+        emit(f"vww_train_step_{variant}_80px", t, "batch=16 CPU")
+
+    # ---- LM train steps (smoke configs) ----
+    for arch in ("llama3.2-1b", "qwen3-moe-30b-a3b", "rwkv6-3b",
+                 "recurrentgemma-9b"):
+        cfg = get_smoke_config(arch).replace(dtype=jnp.float32)
+        fam = get_family(cfg)
+        params, _ = fam.init(jax.random.PRNGKey(0), cfg)
+        opt = sgd(constant(1e-2))
+        state = TrainState(params, opt.init(params))
+        step = jax.jit(make_train_step(cfg, opt))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)), jnp.int32)
+        batch = {"tokens": toks, "targets": toks}
+        t = timeit(lambda s, b: step(s, b)[0], state, batch)
+        emit(f"lm_train_step_{arch}_smoke", t, "b=8 s=64 CPU")
+
+    # ---- decode throughput ----
+    for arch in ("llama3.2-1b", "rwkv6-3b"):
+        cfg = get_smoke_config(arch).replace(dtype=jnp.float32)
+        fam = get_family(cfg)
+        params, _ = fam.init(jax.random.PRNGKey(0), cfg)
+        state, _ = fam.init_decode_state(cfg, 8, 128)
+        dec = jax.jit(lambda s, t, p: fam.decode(params, s, t, p, cfg))
+        toks = jnp.ones((8, 1), jnp.int32)
+        pos = jnp.zeros((8,), jnp.int32)
+        t = timeit(lambda s: dec(s, toks, pos)[0], state)
+        emit(f"decode_step_{arch}_smoke", t,
+             f"batch=8; {8e6 / t:.0f} tok/s CPU")

@@ -1,0 +1,195 @@
+"""Roofline analysis (deliverable g): derive compute / memory /
+collective terms per (arch × shape × mesh) from the dry-run artifacts.
+
+    compute_s   = HLO_FLOPs_per_device / peak_FLOPs        (bf16 MXU)
+    memory_s    = HLO_bytes_per_device / HBM_bw
+    collective_s = collective_bytes_per_device / ICI_link_bw
+
+(`cost_analysis` numbers are per-partition for SPMD modules — verified
+against a hand-counted sharded matmul — so dividing by per-chip peaks is
+the same as global/(chips × peak).)
+
+Also reports MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference) against
+the compiled HLO FLOPs — the "useful compute" ratio that exposes remat
+and attention-waste overheads — plus the dominant term and a bottleneck
+note per cell.  Writes benchmarks/results/roofline.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = Path(__file__).resolve().parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+
+def analytic_memory_floor(arch: str, shape: str, mesh_shape: dict) -> float:
+    """Per-device HBM bytes/step under *perfect fusion* — the napkin floor:
+    params+optimizer RMW, remat-boundary activations, matmul operand/output
+    traffic, vocab logits, KV-cache reads.  The HLO-derived number is the
+    unfused upper bound; real TPU traffic lands between the two.
+    """
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+    tp = mesh_shape.get("model", 1)
+    dp = chips // tp
+    p = cfg.param_count_estimate()
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    L = cfg.n_layers
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    eff_ff = ff * (cfg.top_k if cfg.family == "moe" else 1)
+
+    if spec.kind == "train":
+        tokens_dev = spec.global_batch * spec.seq_len / dp
+        # params: bf16 read fwd + bwd, fp32 grad write, m/v RMW, param write
+        param_traffic = p / chips * (2 + 2 + 4 + 16 + 2)
+        # per-layer activation traffic (bf16): matmul ins/outs, fwd ≈
+        # (attn 4 proj + flash qk/v + mlp 3), bwd+remat ≈ 3× fwd
+        per_layer = 2 * (6 * d + 2 * (qd + kvd) / tp + 3 * eff_ff / tp)
+        act_traffic = tokens_dev * per_layer * L * 4
+        head = tokens_dev * (v / tp) * 4 * 3  # fp32 logits fwd+bwd
+        return param_traffic + act_traffic + head
+    if spec.kind == "prefill":
+        tokens_dev = spec.global_batch * spec.seq_len / dp
+        per_layer = 2 * (6 * d + 2 * (qd + kvd) / tp + 3 * eff_ff / tp)
+        return p / chips * 2 + tokens_dev * per_layer * L + \
+            tokens_dev * (v / tp) * 4
+    # decode: every param shard read once + cache/state read + tiny writes
+    cache = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        length = min(spec.seq_len, cfg.sliding_window or spec.seq_len)
+        cache = 2 * L * spec.global_batch * length * kvd * 2 / chips
+    elif cfg.family == "rwkv":
+        cache = L * spec.global_batch * cfg.n_rwkv_heads * \
+            cfg.rwkv_head_dim**2 * 4 * 2 / chips
+    elif cfg.family == "rglru":
+        n_attn = cfg.n_layers // len(cfg.block_pattern)
+        cache = (2 * n_attn * spec.global_batch * (cfg.sliding_window or 1)
+                 * kvd * 2 + cfg.n_layers * spec.global_batch
+                 * (cfg.d_rnn or d) * 4 * 2) / chips
+    return p / chips * 2 + cache
+
+
+def analyze_record(r: dict) -> dict | None:
+    if r.get("status") != "ok":
+        return None
+    chips = r["chips"]
+    flops_dev = r.get("flops_per_device", 0.0)
+    bytes_dev = r.get("bytes_per_device", 0.0)
+    coll_dev = r.get("collectives", {}).get("total_bytes", 0)
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_hlo_s = bytes_dev / HBM_BW  # unfused upper bound (CPU-compiled HLO)
+    floor_bytes = analytic_memory_floor(r["arch"], r["shape"],
+                                        r.get("mesh_shape", {}))
+    memory_s = floor_bytes / HBM_BW  # perfect-fusion floor (TPU-realistic)
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    model_flops = r.get("model_flops", 0.0)
+    hlo_flops_global = flops_dev * chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    # roofline fraction: useful model compute per step over what the
+    # dominant term allows at peak
+    step_time = bound_s
+    mfu = (model_flops / chips / PEAK_FLOPS_BF16) / step_time if step_time else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "tag": r.get("tag", ""),
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_hlo_s": memory_hlo_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu,
+        "temp_bytes_dev": r.get("memory", {}).get("temp_size_in_bytes"),
+        "arg_bytes_dev": r.get("memory", {}).get("argument_size_in_bytes"),
+    }
+
+
+_NOTES = {
+    "compute": ("compute-bound: cut HLO FLOPs — causal-aware flash scheduling "
+                "(skip fully-masked KV blocks), less remat recompute, or more "
+                "chips on the model axis"),
+    "memory": ("HBM-bound: raise arithmetic intensity — larger per-chip batch, "
+               "fuse elementwise chains, keep activations bf16, avoid "
+               "materializing padded/broadcast KV"),
+    "collective": ("collective-bound: reshard to cut all-gathers (FSDP prefetch "
+                   "overlap, TP only where weights are reused enough), int8 "
+                   "grad compression on the DP axis"),
+}
+
+
+def load_all(tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag", "") != tag:
+            continue
+        a = analyze_record(r)
+        if a:
+            out.append(a)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def write_report(rows: list[dict], path: Path) -> None:
+    lines = [
+        "# Roofline analysis (single-pod 16×16 = 256 chips baseline)",
+        "",
+        "Terms per step: compute = dot-FLOPs/chip ÷ 197 TF/s (bf16, loop-aware "
+        "HLO analysis); memory(floor) = analytic perfect-fusion bytes ÷ 819 GB/s; "
+        "memory(hlo) = unfused-HLO bytes ÷ 819 GB/s (upper bound — the CPU "
+        "backend fuses less than TPU, real traffic lands between the bounds); "
+        "collective = HLO collective operand bytes/chip ÷ 50 GB/s/link. "
+        "Dominance and roofline fraction use the floor.",
+        "",
+        "| arch | shape | mesh | compute | mem(floor) | mem(hlo) | collective "
+        "| dominant | useful(6ND/HLO) | roofline-frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in rows:
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+            f"{fmt_s(a['compute_s'])} | {fmt_s(a['memory_s'])} | "
+            f"{fmt_s(a['memory_hlo_s'])} | "
+            f"{fmt_s(a['collective_s'])} | **{a['dominant']}** | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_fraction']:.2%} | "
+            f"{_NOTES[a['dominant']][:60]}… |")
+    path.write_text("\n".join(lines) + "\n")
+
+
+def run() -> None:
+    from benchmarks.common import emit
+
+    rows = load_all()
+    pod_rows = [a for a in rows if a["mesh"] == "pod"]
+    for a in pod_rows:
+        emit(f"roofline_{a['arch']}_{a['shape']}", 0.0,
+             f"dom={a['dominant']} comp={fmt_s(a['compute_s'])} "
+             f"mem={fmt_s(a['memory_s'])} coll={fmt_s(a['collective_s'])} "
+             f"frac={a['roofline_fraction']:.3f} useful={a['useful_ratio']:.2f}")
+    write_report(pod_rows, RESULTS / "roofline.md")
+    n_multi = sum(1 for a in rows if a["mesh"] == "multipod")
+    emit("roofline_summary", 0.0,
+         f"{len(pod_rows)} pod cells analyzed, {n_multi} multipod compiles ok")
+
+
+if __name__ == "__main__":
+    run()

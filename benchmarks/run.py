@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure + kernel,
+train/serve wall-clock, and the roofline report from the dry-run.
+
+Prints ``name,us_per_call,derived`` CSV rows (0 µs ⇒ analytic row).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (
+        bench_paper_tables,
+        bench_fig7_quant,
+        bench_p2m_kernel,
+        bench_train_serve,
+        roofline,
+    )
+
+    bench_paper_tables.run()
+    bench_fig7_quant.run()
+    bench_p2m_kernel.run()
+    bench_train_serve.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

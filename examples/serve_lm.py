@@ -1,0 +1,55 @@
+"""Continuous-batching serving demo on a reduced LM (CPU).
+
+Shows the ServeEngine's slot lifecycle: 12 requests share 4 decode
+slots; requests join as slots free up; outputs match per-request greedy
+decode exactly (tested in tests/test_serving.py).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.families import get_family
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    help="text-family arch id (reduced config)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(dtype=jnp.float32)
+    family = get_family(cfg)
+    params, _ = family.init(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, max_batch=args.slots, max_len=256)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, int(rng.integers(4, 16))).tolist()
+        engine.submit(Request(uid=uid, prompt=prompt,
+                              max_new_tokens=args.new_tokens))
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"{args.arch}: served {len(done)} requests / {toks} tokens in "
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s on CPU, {args.slots} slots)")
+    for r in done[:3]:
+        print(f"  req {r.uid}: prompt len {len(r.prompt)} → {r.output[:10]}…")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Shared utilities: pytree helpers, dtype policies, logging."""
+from repro.common.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path,
+    param_count,
+    flatten_with_names,
+)
+from repro.common.precision import Policy, DEFAULT_POLICY, cast_floating
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_map_with_path",
+    "param_count",
+    "flatten_with_names",
+    "Policy",
+    "DEFAULT_POLICY",
+    "cast_floating",
+]

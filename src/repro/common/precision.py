@@ -1,0 +1,41 @@
+"""Mixed-precision policy.
+
+Parameters are stored fp32 (master copy in the optimizer), cast to a
+compute dtype (bf16 on TPU) on entry to the forward pass, and reductions
+(norm statistics, softmax, losses, ADC accumulation) are kept fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    reduce_dtype: Any = jnp.float32
+
+    def cast_params(self, tree: Any) -> Any:
+        return cast_floating(tree, self.compute_dtype)
+
+    def cast_output(self, tree: Any) -> Any:
+        return cast_floating(tree, self.param_dtype)
+
+
+DEFAULT_POLICY = Policy()
+FP32_POLICY = Policy(compute_dtype=jnp.float32)
+
+
+def cast_floating(tree: Any, dtype: Any) -> Any:
+    """Cast floating-point leaves to ``dtype``; leave ints/bools alone."""
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)

@@ -1,0 +1,66 @@
+"""Pytree utilities used across the framework.
+
+All parameter containers in this codebase are plain nested dicts of
+jnp/np arrays ("param trees").  These helpers provide named flattening
+(for sharding-rule matching and checkpoint manifests) and size
+accounting (for memory budgeting and roofline napkin math).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _is_leaf(x: Any) -> bool:
+    return not isinstance(x, dict)
+
+
+def flatten_with_names(tree: Any, prefix: str = "") -> Iterator[tuple[str, Any]]:
+    """Yield ``(dotted.path, leaf)`` pairs in deterministic (sorted) order."""
+    if _is_leaf(tree):
+        yield prefix or "<root>", tree
+        return
+    for key in sorted(tree.keys()):
+        sub = tree[key]
+        path = f"{prefix}.{key}" if prefix else str(key)
+        yield from flatten_with_names(sub, path)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any, prefix: str = "") -> Any:
+    """Like ``jax.tree.map`` but ``fn`` receives the dotted path too."""
+    if _is_leaf(tree):
+        return fn(prefix or "<root>", tree)
+    return {
+        key: tree_map_with_path(fn, tree[key], f"{prefix}.{key}" if prefix else str(key))
+        for key in tree.keys()
+    }
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total byte footprint across all leaves."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def param_count(tree: Any) -> int:
+    """Alias of :func:`tree_size` for readability at call sites."""
+    return tree_size(tree)
+
+
+def assert_trees_all_finite(tree: Any, name: str = "tree") -> None:
+    """Raise if any leaf contains NaN/Inf (host-side check, test helper)."""
+    for path, leaf in flatten_with_names(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f" and not np.all(np.isfinite(arr)):
+            raise AssertionError(f"{name}[{path}] contains non-finite values")

@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+One module per assigned architecture (exact public config) plus the
+paper's own P²M-VWW model.  Every module defines ``CONFIG`` and
+``SMOKE`` (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, cells
+
+ARCH_IDS = [
+    "qwen3-32b",
+    "stablelm-1.6b",
+    "qwen2-72b",
+    "llama3.2-1b",
+    "qwen3-moe-30b-a3b",
+    "mixtral-8x22b",
+    "rwkv6-3b",
+    "llama-3.2-vision-11b",
+    "recurrentgemma-9b",
+    "whisper-tiny",
+]
+
+_MODULES = {name: "repro.configs." + name.replace("-", "_").replace(".", "_")
+            for name in ARCH_IDS}
+
+
+def _load(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name])
+
+
+def get_config(name: str):
+    return _load(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _load(name).SMOKE
+
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "applicable", "cells",
+           "get_config", "get_smoke_config"]

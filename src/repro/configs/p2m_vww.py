@@ -1,0 +1,16 @@
+"""The paper's own benchmark: MobileNetV2-VWW with the P²M first layer
+(Table 1 hyperparameters: k=5, s=5, p=0, c_o=8, N_b=8)."""
+from repro.core.p2m_conv import P2MConvConfig
+from repro.models.mobilenetv2 import MNV2Config
+
+P2M_LAYER = P2MConvConfig(kernel=5, stride=5, in_channels=3, out_channels=8,
+                          n_bits=8)
+
+CONFIG = MNV2Config(variant="p2m", image_size=560, p2m=P2M_LAYER)
+BASELINE = MNV2Config(variant="baseline", image_size=560)
+
+# reduced configs for CPU training runs / tests
+SMOKE = MNV2Config(variant="p2m", image_size=80, width=0.25, head_channels=64,
+                   p2m=P2M_LAYER)
+SMOKE_BASELINE = MNV2Config(variant="baseline", image_size=80, width=0.25,
+                            head_channels=64)

@@ -1,0 +1,44 @@
+"""P²M core: the paper's contribution as composable JAX modules.
+
+Layers:
+  pixel_model — SPICE-surrogate + polynomial curve fit (g(w, x))
+  adc         — SS-ADC / digital-CDS model (quantized shifted ReLU)
+  p2m_conv    — the in-pixel convolutional layer (train + deploy forms)
+  bn_fold     — BN scale/shift folding into weights + counter pre-load
+  quant       — post-training quantization + sweeps
+  bandwidth   — Eq. 2-3 bandwidth-reduction model
+  energy      — Eq. 4-8 EDP model (Tables 4-5 constants)
+  frontend    — P²M as a modality frontend for VLM/audio backbones
+"""
+from repro.core.adc import ADCConfig, adc_counts, adc_dequant, shifted_relu, ste_adc
+from repro.core.bandwidth import FirstLayerGeom, bandwidth_reduction, compression_ratio
+from repro.core.bn_fold import bn_affine, deploy_params, fold_error
+from repro.core.energy import (
+    BASELINE_C_ENERGY,
+    BASELINE_DELAY,
+    BASELINE_NC_ENERGY,
+    ConvSpec,
+    DelayConstants,
+    EnergyConstants,
+    EDPReport,
+    P2M_DELAY,
+    P2M_ENERGY,
+    evaluate_model,
+    total_macs,
+)
+from repro.core.p2m_conv import (
+    P2MConvConfig,
+    apply_p2m_conv_deploy,
+    apply_p2m_conv_train,
+    extract_patches,
+    init_p2m_conv,
+    init_p2m_state,
+)
+from repro.core.pixel_model import (
+    PixelModel,
+    default_pixel_model,
+    fit_pixel_model,
+    linear_pixel_model,
+    spice_surrogate,
+)
+from repro.core.quant import QuantSpec, fake_quant, quantize_deploy, quantize_symmetric

@@ -1,0 +1,73 @@
+"""SS-ADC + digital-CDS model (paper §3.3).
+
+The single-slope ADC digitizes the column-line voltage by counting clock
+cycles until a ramp crosses the input.  The digital CDS makes the counter
+up-count for the positive-weight sample and down-count for the
+negative-weight sample; the paper re-purposes this to get, for free:
+
+* signed accumulation (positive − negative weight contributions),
+* a **quantized ReLU** (the latched count is clamped at ≥ 0),
+* the BN **shift term** ``B`` (counter pre-loaded to ``round(B/Δ)``
+  instead of 0 — the "shifted ReLU" of §4.2).
+
+This module is the digital-exact simulation of that behaviour, plus a
+straight-through-estimator (STE) version used during training.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCConfig:
+    """N-bit SS-ADC; ``v_lsb`` volts per count; 2^n_bits − 1 full-scale counts."""
+
+    n_bits: int = 8
+    v_lsb: float = 1.0 / 255.0  # normalized-volt per count (full scale ≈ 1V)
+
+    @property
+    def max_count(self) -> int:
+        return (1 << self.n_bits) - 1
+
+    @property
+    def full_scale(self) -> float:
+        return self.max_count * self.v_lsb
+
+
+def adc_counts(v, cfg: ADCConfig, preset_counts=0):
+    """Integer counter output: ``clip(round(v/Δ) + preset, 0, 2^n − 1)``.
+
+    ``v`` is the CDS differential voltage (positive sample − negative
+    sample); ``preset_counts`` carries the BN shift term.  Output dtype is
+    int32 — this is exactly what leaves the sensor on the I/O bus.
+    """
+    counts = jnp.round(v / cfg.v_lsb).astype(jnp.int32) + jnp.asarray(
+        preset_counts, dtype=jnp.int32
+    )
+    return jnp.clip(counts, 0, cfg.max_count)
+
+
+def adc_dequant(counts, cfg: ADCConfig):
+    """Map counts back to normalized volts for downstream digital layers."""
+    return counts.astype(jnp.float32) * cfg.v_lsb
+
+
+def shifted_relu(v, shift, cfg: ADCConfig):
+    """Float (training-time) view of the ADC: ``clip(v + shift, 0, fs)``.
+
+    ``shift`` is the BN ``B`` term in volts; saturation at full scale is
+    modeled because the counter stops at 2^n − 1.
+    """
+    return jnp.clip(v + shift, 0.0, cfg.full_scale)
+
+
+def ste_adc(v, shift, cfg: ADCConfig):
+    """Quantization-aware ADC: forward = integer-exact, backward = identity
+    through the clip's linear region (straight-through estimator)."""
+    soft = shifted_relu(v, shift, cfg)
+    preset = jnp.round(jnp.asarray(shift) / cfg.v_lsb).astype(jnp.int32)
+    hard = adc_dequant(adc_counts(v, cfg, preset_counts=preset), cfg)
+    return soft + jax.lax.stop_gradient(hard - soft)

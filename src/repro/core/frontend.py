@@ -1,0 +1,95 @@
+"""P²M as a drop-in modality frontend (beyond-paper integration).
+
+The paper embeds the first CNN layers in the sensor.  For the assigned
+multimodal architectures (llama-3.2-vision, whisper) the same idea slots
+in as the *patch/frame embedder*: the sensor ships N_b-bit compressed
+feature maps instead of raw 12-bit pixels, and a small linear projection
+lifts them to the backbone width.  Select with ``--frontend p2m``.
+
+The backbone dry-runs use the precomputed-embedding stub per the brief;
+this module is exercised by the VWW example and the frontend tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.p2m_conv import (
+    P2MConvConfig,
+    apply_p2m_conv_deploy,
+    apply_p2m_conv_train,
+    init_p2m_conv,
+    init_p2m_state,
+)
+from repro.core.pixel_model import PixelModel, default_pixel_model
+
+
+@dataclasses.dataclass(frozen=True)
+class P2MFrontendConfig:
+    """In-pixel compressive patch embedder.
+
+    ``pool`` merges a ``pool×pool`` block of P²M outputs into one token, so
+    token count = (i/(stride·pool))².
+    """
+
+    image_size: int = 560
+    conv: P2MConvConfig = dataclasses.field(default_factory=P2MConvConfig)
+    d_model: int = 4096
+    pool: int = 4
+
+    @property
+    def tokens(self) -> int:
+        side = self.conv.out_spatial(self.image_size) // self.pool
+        return side * side
+
+    @property
+    def token_feature_dim(self) -> int:
+        return self.conv.out_channels * self.pool * self.pool
+
+
+def init_p2m_frontend(key: jax.Array, cfg: P2MFrontendConfig) -> dict[str, Any]:
+    ckey, pkey = jax.random.split(key)
+    fan_in = cfg.token_feature_dim
+    return {
+        "conv": init_p2m_conv(ckey, cfg.conv),
+        "proj": jax.random.normal(pkey, (fan_in, cfg.d_model), jnp.float32)
+        * (1.0 / fan_in) ** 0.5,
+    }
+
+
+def init_p2m_frontend_state(cfg: P2MFrontendConfig) -> dict[str, Any]:
+    return {"conv": init_p2m_state(cfg.conv)}
+
+
+def apply_p2m_frontend(
+    params: dict,
+    state: dict,
+    images: jax.Array,
+    cfg: P2MFrontendConfig,
+    model: PixelModel | None = None,
+    *,
+    train: bool = False,
+    deploy: dict | None = None,
+):
+    """(B, H, W, 3) → (B, tokens, d_model) embeddings, plus new state.
+
+    When ``deploy`` is given, the folded/quantized in-pixel path is used
+    (what the manufactured sensor would emit)."""
+    model = model or default_pixel_model()
+    if deploy is not None:
+        fmap = apply_p2m_conv_deploy(deploy, images, cfg.conv, model)
+        new_state = state
+    else:
+        fmap, conv_state = apply_p2m_conv_train(
+            params["conv"], state["conv"], images, cfg.conv, model, train=train
+        )
+        new_state = {"conv": conv_state}
+    b, h, w, c = fmap.shape
+    p = cfg.pool
+    x = fmap[:, : (h // p) * p, : (w // p) * p, :]
+    x = x.reshape(b, h // p, p, w // p, p, c).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, (h // p) * (w // p), p * p * c)
+    return x @ params["proj"], new_state

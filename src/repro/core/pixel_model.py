@@ -1,0 +1,175 @@
+"""Behavioral model of the weight-embedded P²M pixel (paper §3.1, Fig. 3).
+
+The paper sweeps the pixel circuit in SPICE (22 nm GF FD-SOI) over weight
+(transistor width) and input activation (photodiode current), then fits a
+behavioral *curve-fit function* ``g(w, x)`` that replaces every multiply in
+the first conv layer during training (paper §4.1).
+
+Two layers of modeling live here:
+
+1. :func:`spice_surrogate` — a stand-in for the (unreleased) SPICE data:
+   a monotone, saturating transfer surface qualitatively matching Fig. 3
+   (pixel output grows with both ``w`` and ``x``; the product is
+   compressive at large ``w·x`` because the source follower leaves
+   saturation). Users with real SPICE sweeps feed their samples straight
+   into :func:`fit_pixel_model` instead.
+
+2. :class:`PixelModel` — the fitted **degree-(dw,dx) bivariate polynomial**
+   ``g(w, x) = Σ_{i=1..dw, j=1..dx} a_ij · w^i · x^j``.
+
+   The polynomial form is the TPU-native adaptation (DESIGN.md §2): the
+   receptive-field accumulation ``Σ_r g(w_r, x_r)`` factorizes into
+   ``Σ_ij a_ij (X^∘j @ W^∘i)`` — a short sum of MXU matmuls — instead of
+   per-element function evaluation.  Terms with ``i = 0`` or ``j = 0`` are
+   excluded by construction: ``g(0, x) = 0`` (no weight transistor
+   activated ⇒ no contribution) and ``g(w, 0) = 0`` (CDS subtracts the
+   reset level, so zero light ⇒ zero differential output).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+# Operating ranges (normalized units): transistor driving strength and
+# photodiode current are both mapped to [0, 1] by the co-design flow.
+W_RANGE = (0.0, 1.0)
+X_RANGE = (0.0, 1.0)
+
+
+def spice_surrogate(w, x, *, v_max: float = 1.0, sat: float = 0.55, sf_leak: float = 0.02):
+    """Stand-in for the SPICE-simulated pixel transfer surface (Fig. 3).
+
+    ``v = v_max · (1+sat)·u / (1 + sat·u)`` with ``u = w·x`` — linear in the
+    product at small signal, compressive toward ``v_max`` at large signal —
+    plus a small source-follower leakage term ``sf_leak·x·w·(1−x)`` that
+    bends the surface away from an exact product (this is what makes the
+    scatter in Fig. 3(b) deviate from the ideal ``W×I`` line).
+    """
+    u = w * x
+    main = v_max * (1.0 + sat) * u / (1.0 + sat * u)
+    return main + sf_leak * x * w * (1.0 - x)
+
+
+@dataclasses.dataclass(frozen=True)
+class PixelModel:
+    """Fitted polynomial pixel model ``g(w,x) = Σ a_ij w^i x^j`` (i,j ≥ 1).
+
+    Attributes:
+      coeffs: ``(dw, dx)`` array; ``coeffs[i-1, j-1]`` multiplies ``w^i x^j``.
+      fit_rmse: residual of the least-squares fit against the source samples.
+      read_noise_std: optional Gaussian read-noise (normalized volts) applied
+        by callers that simulate analog readout; 0 disables.
+    """
+
+    coeffs: np.ndarray
+    fit_rmse: float = 0.0
+    read_noise_std: float = 0.0
+
+    @property
+    def degree_w(self) -> int:
+        return self.coeffs.shape[0]
+
+    @property
+    def degree_x(self) -> int:
+        return self.coeffs.shape[1]
+
+    def __call__(self, w, x):
+        """Evaluate ``g(w, x)`` elementwise (broadcasting), in jnp."""
+        coeffs = jnp.asarray(self.coeffs, dtype=jnp.result_type(w, x, jnp.float32))
+        # Horner in x inside Horner in w: g = Σ_i w^i (Σ_j a_ij x^j)
+        acc = jnp.zeros(jnp.broadcast_shapes(jnp.shape(w), jnp.shape(x)),
+                        dtype=coeffs.dtype)
+        for i in range(self.degree_w, 0, -1):
+            inner = jnp.zeros_like(acc)
+            for j in range(self.degree_x, 0, -1):
+                inner = (inner + coeffs[i - 1, j - 1]) * x
+            acc = (acc + inner) * w if i > 1 else acc * w + inner * w
+        return acc
+
+    def term(self, i: int, j: int) -> float:
+        """Coefficient of ``w^i x^j`` (1-indexed powers)."""
+        return float(self.coeffs[i - 1, j - 1])
+
+
+def _design_matrix(w: np.ndarray, x: np.ndarray, dw: int, dx: int) -> np.ndarray:
+    cols = [np.power(w, i) * np.power(x, j) for i in range(1, dw + 1) for j in range(1, dx + 1)]
+    return np.stack(cols, axis=-1)
+
+
+def fit_pixel_model(
+    samples_w: np.ndarray | None = None,
+    samples_x: np.ndarray | None = None,
+    samples_v: np.ndarray | None = None,
+    *,
+    degree_w: int = 3,
+    degree_x: int = 3,
+    grid: int = 64,
+    read_noise_std: float = 0.0,
+    term_mask: np.ndarray | None = None,
+) -> PixelModel:
+    """Least-squares fit of the polynomial pixel model.
+
+    With no sample arrays, fits against :func:`spice_surrogate` on a
+    ``grid × grid`` sweep of the operating range (this is the default
+    model used throughout the repo).  With real SPICE sweep data, pass
+    ``samples_w/x/v`` as flat arrays.
+
+    ``term_mask`` (dw, dx) bool selects which basis terms participate —
+    each active term costs one MXU matmul in the kernel, so pruning
+    near-zero terms trades fit error for compute (see EXPERIMENTS.md
+    §Perf).  Masked-out coefficients are exactly 0 and the kernels skip
+    them.
+    """
+    if samples_v is None:
+        ws = np.linspace(W_RANGE[0], W_RANGE[1], grid)
+        xs = np.linspace(X_RANGE[0], X_RANGE[1], grid)
+        wg, xg = np.meshgrid(ws, xs, indexing="ij")
+        samples_w, samples_x = wg.ravel(), xg.ravel()
+        samples_v = np.asarray(spice_surrogate(samples_w, samples_x))
+    samples_w = np.asarray(samples_w, dtype=np.float64)
+    samples_x = np.asarray(samples_x, dtype=np.float64)
+    samples_v = np.asarray(samples_v, dtype=np.float64)
+
+    A = _design_matrix(samples_w, samples_x, degree_w, degree_x)
+    if term_mask is not None:
+        mask = np.asarray(term_mask, bool).reshape(-1)
+        assert mask.shape[0] == A.shape[1]
+        sel = np.where(mask)[0]
+        coef_sel, _, _, _ = np.linalg.lstsq(A[:, sel], samples_v, rcond=None)
+        coef = np.zeros(A.shape[1])
+        coef[sel] = coef_sel
+    else:
+        coef, _, _, _ = np.linalg.lstsq(A, samples_v, rcond=None)
+    resid = A @ coef - samples_v
+    rmse = float(np.sqrt(np.mean(resid**2)))
+    coeffs = coef.reshape(degree_w, degree_x)
+    return PixelModel(coeffs=coeffs, fit_rmse=rmse, read_noise_std=read_noise_std)
+
+
+def prune_pixel_model(model: PixelModel, threshold: float = 0.06,
+                      **fit_kwargs) -> PixelModel:
+    """Refit keeping only terms with |a_ij| ≥ threshold (re-optimized)."""
+    mask = np.abs(model.coeffs) >= threshold
+    return fit_pixel_model(degree_w=model.degree_w, degree_x=model.degree_x,
+                           term_mask=mask, **fit_kwargs)
+
+
+# Default fitted model (22 nm GF surrogate), computed once at import of the
+# callers that need it.  Cheap: a 64×64 lstsq.
+_DEFAULT: PixelModel | None = None
+
+
+def default_pixel_model() -> PixelModel:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = fit_pixel_model()
+    return _DEFAULT
+
+
+def linear_pixel_model() -> PixelModel:
+    """Ideal multiplier ``g(w,x) = w·x`` — the 'no non-ideality' ablation."""
+    coeffs = np.zeros((1, 1))
+    coeffs[0, 0] = 1.0
+    return PixelModel(coeffs=coeffs, fit_rmse=0.0)

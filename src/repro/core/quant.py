@@ -1,0 +1,69 @@
+"""Post-training quantization for the P²M layer (paper §4.2, §5.2 Fig. 7a).
+
+The paper trains in float, then quantizes (no QAT): first-layer weights
+per-channel symmetric to ``w_bits``, output activations to ``N_b`` bits
+via the ADC, and the BN parameters (μ, σ, γ, β → the shift term B) to the
+same grid as the counter pre-load.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig
+
+
+def quantize_symmetric(x, bits: int, axis=None):
+    """Symmetric linear quantization. Returns (int values, scale).
+
+    ``axis`` selects per-channel scales (reduce over all other axes).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    if axis is None:
+        scale = jnp.max(jnp.abs(x)) / qmax
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        scale = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x, bits: int, axis=None):
+    """Quantize-dequantize with straight-through gradient."""
+    q, scale = quantize_symmetric(x, bits, axis)
+    out = dequantize(q, scale)
+    return x + jax.lax.stop_gradient(out - x)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Bit-widths for the deployable P²M layer."""
+
+    w_bits: int = 8
+    out_bits: int = 8
+    shift_bits: int = 8
+
+
+def quantize_deploy(deploy: dict, spec: QuantSpec) -> dict:
+    """Quantize folded deploy params (weights per-channel, shift to the
+    ADC count grid).  Output-activation quantization is the ADC itself
+    (``out_bits`` configures its ``ADCConfig``)."""
+    wq = fake_quant(deploy["w"], spec.w_bits, axis=1)
+    adc = ADCConfig(n_bits=spec.out_bits, v_lsb=1.0 / (2**spec.out_bits - 1))
+    shift_counts = jnp.round(deploy["shift"] / adc.v_lsb)
+    sq = shift_counts * adc.v_lsb
+    out = dict(deploy)
+    out["w"] = wq
+    out["shift"] = sq
+    return out
+
+
+def adc_for_bits(out_bits: int) -> ADCConfig:
+    return ADCConfig(n_bits=out_bits, v_lsb=1.0 / (2**out_bits - 1))

@@ -1,0 +1,5 @@
+from repro.data.lm import SyntheticLMDataset
+from repro.data.vww_synthetic import SyntheticVWW
+from repro.data.pipeline import DataPipeline
+
+__all__ = ["SyntheticLMDataset", "SyntheticVWW", "DataPipeline"]

@@ -1,0 +1,4 @@
+from repro.kernels.p2m_conv.ops import p2m_matmul, p2m_matmul_jnp
+from repro.kernels.p2m_conv.ref import p2m_matmul_ref
+
+__all__ = ["p2m_matmul", "p2m_matmul_jnp", "p2m_matmul_ref"]

@@ -1,0 +1,114 @@
+"""Jit'd wrappers for the P²M inner product.
+
+Three tiers, all computing the same math (see `ref.py` for the oracle):
+
+* :func:`p2m_matmul_jnp` — basis-decomposed XLA version (dw·dx matmuls),
+  fully differentiable.  This is the training workhorse on any backend.
+* :func:`p2m_matmul` — Pallas kernel forward (VMEM-fused power expansion +
+  epilogue) with a custom VJP whose backward reuses the jnp path, so the
+  kernel is trainable.  On CPU the kernel runs in interpret mode.
+* mode="quant" uses an STE backward (gradient of the soft-clipped path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig
+from repro.core.pixel_model import PixelModel
+from repro.kernels.p2m_conv.kernel import p2m_matmul_pallas
+
+_DEFAULT_ADC = ADCConfig()
+
+
+def _coeff_tuple(model: PixelModel) -> tuple:
+    return tuple(tuple(float(v) for v in row) for row in model.coeffs)
+
+
+def p2m_matmul_jnp(x, w, shift, model: PixelModel, adc: ADCConfig | None = None,
+                   mode: str = "relu"):
+    """Basis-decomposed P²M product in plain jnp (differentiable).
+
+    x: (M, K) in [0,1]; w: (K, N) signed; shift: (N,) volts.
+    mode: "raw" (accumulation + shift), "relu" (shifted ReLU with full-scale
+    saturation), "quant" (integer-exact counter emulation, STE-friendly
+    only through :func:`p2m_matmul`).
+    """
+    adc = adc or _DEFAULT_ADC
+    coeffs = model.coeffs
+    dw, dx = coeffs.shape
+    x32 = x.astype(jnp.float32)
+    sgn = jnp.sign(w).astype(jnp.float32)
+    aw = jnp.abs(w).astype(jnp.float32)
+
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    wp = aw
+    for i in range(1, dw + 1):
+        wsig = sgn * wp
+        xp = x32
+        for j in range(1, dx + 1):
+            a_ij = float(coeffs[i - 1, j - 1])
+            if a_ij != 0.0:
+                acc = acc + a_ij * (xp @ wsig)
+            if j < dx:
+                xp = xp * x32
+        if i < dw:
+            wp = wp * aw
+
+    s = jnp.asarray(shift, jnp.float32)
+    if mode == "raw":
+        return acc + s
+    if mode == "relu":
+        return jnp.clip(acc + s, 0.0, adc.full_scale)
+    if mode == "quant":
+        counts = jnp.round(acc / adc.v_lsb) + jnp.round(s / adc.v_lsb)
+        return jnp.clip(counts, 0.0, float(adc.max_count)) * adc.v_lsb
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def p2m_matmul(x, w, shift, model: PixelModel, adc: ADCConfig | None = None,
+               mode: str = "relu", interpret: bool | None = None):
+    """Pallas-kernel P²M product; differentiable via custom VJP.
+
+    ``interpret=None`` auto-selects interpret mode off-TPU (the kernel body
+    then runs as reference Python, validating the TPU lowering path).
+    """
+    return _fwd_only(x, w, shift, model, adc, mode, interpret)
+
+
+def _fwd_only(x, w, shift, model, adc, mode, interpret):
+    adc = adc or _DEFAULT_ADC
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return p2m_matmul_pallas(
+        x,
+        w,
+        shift,
+        coeffs=_coeff_tuple(model),
+        mode=mode,
+        v_lsb=adc.v_lsb,
+        max_count=adc.max_count,
+        interpret=bool(interpret),
+    )
+
+
+def _p2m_fwd(x, w, shift, model, adc, mode, interpret):
+    out = _fwd_only(x, w, shift, model, adc, mode, interpret)
+    return out, (x, w, shift)
+
+
+def _p2m_bwd(model, adc, mode, interpret, res, g):
+    x, w, shift = res
+    # Backward = VJP of the jnp path.  "quant" uses the soft-clip ("relu")
+    # path as a straight-through estimator.
+    bwd_mode = "relu" if mode == "quant" else mode
+    _, vjp = jax.vjp(lambda xx, ww, ss: p2m_matmul_jnp(xx, ww, ss, model, adc, bwd_mode),
+                     x, w, shift)
+    gx, gw, gs = vjp(g.astype(jnp.float32))
+    return gx.astype(x.dtype), gw.astype(w.dtype), gs.astype(jnp.asarray(shift).dtype)
+
+
+p2m_matmul.defvjp(_p2m_fwd, _p2m_bwd)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the P²M non-ideal convolution inner product.
+
+This is the *faithful elementwise* formulation — exactly what the paper's
+own PyTorch framework computes (§4.1): every multiply in the im2col matmul
+is replaced by the behavioral pixel function ``g``, with the CDS sign
+split applied per weight, then the ADC epilogue.
+
+    out[m, n] = epilogue( Σ_k  sign(W[k,n]) · g(|W[k,n]|, X[m,k]) )
+
+It materializes an (chunk, K, N) broadcast product, so it is the slow
+oracle used for correctness only; `ops.py` / `kernel.py` hold the fast
+basis-decomposed versions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig, adc_counts, adc_dequant, shifted_relu
+from repro.core.pixel_model import PixelModel
+
+
+def _g_poly(coeffs, w, x):
+    """Elementwise ``g(w,x) = Σ_{i,j≥1} a_ij w^i x^j`` in fp32."""
+    acc = jnp.zeros(jnp.broadcast_shapes(w.shape, x.shape), dtype=jnp.float32)
+    dw, dx = coeffs.shape
+    for i in range(1, dw + 1):
+        for j in range(1, dx + 1):
+            acc = acc + coeffs[i - 1, j - 1] * (w**i) * (x**j)
+    return acc
+
+
+def p2m_matmul_ref(
+    x,
+    w,
+    model: PixelModel,
+    shift=None,
+    adc: ADCConfig | None = None,
+    *,
+    quantize: bool = False,
+    chunk: int = 128,
+):
+    """Oracle P²M inner product.
+
+    Args:
+      x: (M, K) im2col activation patches, values in [0, 1].
+      w: (K, N) signed weights, |w| in [0, 1].
+      model: fitted pixel model (polynomial coefficients).
+      shift: optional (N,) BN shift term (volts); None ⇒ 0.
+      adc: ADC config for the epilogue; None ⇒ raw accumulation returned.
+      quantize: if True, run the integer-exact counter path.
+      chunk: rows of ``x`` per broadcast block (memory control).
+
+    Returns: (M, N) float32.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    coeffs = jnp.asarray(model.coeffs, jnp.float32)
+    sgn = jnp.sign(w)
+    aw = jnp.abs(w)
+
+    outs = []
+    for m0 in range(0, x.shape[0], chunk):
+        xb = x[m0 : m0 + chunk]  # (c, K)
+        # (c, K, N): g(|w|, x) per (patch-element, channel) pair, signed.
+        prod = sgn[None, :, :] * _g_poly(coeffs, aw[None, :, :], xb[:, :, None])
+        outs.append(prod.sum(axis=1))
+    raw = jnp.concatenate(outs, axis=0)
+
+    if adc is None:
+        return raw if shift is None else raw + jnp.asarray(shift, jnp.float32)
+    s = jnp.zeros((w.shape[1],), jnp.float32) if shift is None else jnp.asarray(shift, jnp.float32)
+    if quantize:
+        preset = jnp.round(s / adc.v_lsb).astype(jnp.int32)
+        return adc_dequant(adc_counts(raw, adc, preset_counts=preset), adc)
+    return shifted_relu(raw, s, adc)

@@ -1,0 +1,235 @@
+"""Static analysis of optimized (SPMD-partitioned) HLO text.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports)
+counts each ``while`` body **once**, so for scan-over-layers models it
+understates FLOPs and collective traffic by ~n_layers×.  This module
+re-derives per-device totals with loop multipliers:
+
+* splits the module into computations,
+* walks the call graph from ENTRY, propagating multipliers:
+  ``while`` bodies × known_trip_count (annotated by XLA in
+  ``backend_config={"known_trip_count":{"n":…}}``), fusions/calls ×1,
+* FLOPs: every ``dot`` (including inside fusions) as
+  ``2 · result_elems · Π(contracting dims)``,
+* HBM traffic: per top-level instruction, operands + result bytes
+  (fusions count as one kernel; their internals are skipped) — the
+  standard one-kernel-one-roundtrip traffic model,
+* collective bytes by type (operand-side accounting; ``*-done`` ops
+  skipped so async pairs count once).
+
+All numbers are per-device (the module is the per-partition program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "f16": 2, "bf16": 2, "s16": 2, "u16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+                "c128": 16, "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_CALLS = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# opcodes that move no HBM bytes themselves
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "partition-id", "replica-id", "iota"}
+
+
+def _shape_info(type_str: str) -> tuple[int, list[list[int]]]:
+    """(total bytes, list of dim-lists) for a (possibly tuple) type."""
+    total = 0
+    shapes = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        shapes.append(dl)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_dims: list
+    args: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    entry: bool
+    instrs: list
+
+    @property
+    def root(self) -> "Instr | None":
+        for i in self.instrs:
+            if i.is_root:
+                return i
+        return self.instrs[-1] if self.instrs else None
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            current = Computation(hdr.group(2), bool(hdr.group(1)), [])
+            comps[current.name] = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, args = m.groups()
+        rb, dims = _shape_info(type_str)
+        current.instrs.append(Instr(name, opcode, rb,
+                                    dims[0] if len(dims) == 1 else dims, args,
+                                    is_root="ROOT" in line.split("=")[0]))
+    return comps
+
+
+def _dus_traffic(ins: Instr, by_name: dict) -> float:
+    """dynamic-update-slice is in-place on real hardware: traffic is the
+    updated slice (read-modify-write), not the full carried buffer."""
+    ops = _OPERAND.findall(ins.args)
+    if len(ops) >= 2 and ops[1] in by_name:
+        return 2.0 * by_name[ops[1]].result_bytes
+    return 2.0 * ins.result_bytes
+
+
+def _dot_flops(instr: Instr, by_name: dict[str, Instr]) -> float:
+    ops = _OPERAND.findall(instr.args.split(", lhs_contracting")[0])
+    lhs = by_name.get(ops[0]) if ops else None
+    m = _LHS_C.search(instr.args)
+    if lhs is None or m is None or not isinstance(lhs.result_dims, list):
+        return 0.0
+    contract = 1
+    dims = lhs.result_dims
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            contract *= dims[idx]
+    result_elems = 1
+    rd = instr.result_dims if instr.result_dims and isinstance(
+        instr.result_dims[0], int) else []
+    for d in rd:
+        result_elems *= d
+    return 2.0 * result_elems * contract
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0, "collectives": {}}
+
+    # call-graph multipliers + fusion marking
+    mult: dict[str, float] = {entry.name: 1.0}
+    fused: set[str] = set()
+    order = [entry.name]
+    seen = {entry.name}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for ins in comp.instrs:
+            callees = _CALLS.findall(ins.args)
+            conds = _COND.findall(ins.args)
+            if ins.opcode == "while":
+                tm = _TRIP.search(ins.args)
+                trip = float(tm.group(1)) if tm else 1.0
+                for cal in callees + conds:
+                    mult[cal] = mult.get(cal, 0.0) + m * trip
+                    if cal not in seen:
+                        seen.add(cal)
+                        order.append(cal)
+            else:
+                for cal in callees + conds:
+                    mult[cal] = mult.get(cal, 0.0) + m
+                    if ins.opcode == "fusion":
+                        fused.add(cal)
+                    if cal not in seen:
+                        seen.add(cal)
+                        order.append(cal)
+
+    flops = 0.0
+    traffic = 0.0
+    coll = {c: {"bytes": 0.0, "count": 0.0} for c in COLLECTIVES}
+    unknown_trips = 0
+
+    for comp in comps.values():
+        m = mult.get(comp.name)
+        if m is None:
+            continue  # unreachable (dead computations)
+        by_name = {i.name: i for i in comp.instrs}
+        in_fusion = comp.name in fused
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, by_name)
+            if in_fusion:
+                continue  # fusion internals: no independent HBM traffic
+            if ins.opcode in _NO_TRAFFIC or ins.opcode.endswith("-done"):
+                continue
+            if ins.opcode == "dynamic-update-slice":
+                traffic += m * _dus_traffic(ins, by_name)
+                continue
+            if ins.opcode == "dynamic-slice":
+                traffic += m * 2.0 * ins.result_bytes
+                continue
+            if ins.opcode == "fusion":
+                callee = _CALLS.search(ins.args)
+                root = comps[callee.group(1)].root if (
+                    callee and callee.group(1) in comps) else None
+                if root is not None and root.opcode == "dynamic-update-slice":
+                    # in-place update fusion: slice RMW + compute inputs ≈ 3×
+                    callee_by = {i.name: i for i in comps[callee.group(1)].instrs}
+                    traffic += m * 1.5 * _dus_traffic(root, callee_by)
+                    continue
+            operand_bytes = sum(
+                by_name[o].result_bytes for o in _OPERAND.findall(ins.args)
+                if o in by_name)
+            base = None
+            for c in COLLECTIVES:
+                if ins.opcode == c or ins.opcode.startswith(c + "-"):
+                    base = c
+                    break
+            if base is not None:
+                eff = operand_bytes or ins.result_bytes
+                if base == "all-gather":
+                    eff = min(eff, ins.result_bytes)
+                coll[base]["bytes"] += m * eff
+                coll[base]["count"] += m
+            traffic += m * (operand_bytes + ins.result_bytes)
+
+    coll_total = sum(v["bytes"] for v in coll.values())
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "collectives": {**coll, "total_bytes": coll_total},
+        "n_computations": len(comps),
+        "unknown_trips": unknown_trips,
+    }

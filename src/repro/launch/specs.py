@@ -1,0 +1,170 @@
+"""Per-cell (arch × shape) abstract specs, sharding plans, and step
+builders for the dry-run and the launchers.
+
+Everything here is allocation-free: parameters/optimizer state come from
+``jax.eval_shape`` over the real init functions, inputs are
+ShapeDtypeStructs, and decode caches use the families' ``abstract=True``
+path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.families import get_family
+from repro.models.init_utils import abstract_init
+from repro.optim import adamw, constant
+from repro.parallel import ShardingPlan, plan_for
+from repro.parallel.sharding_utils import shardings_for
+from repro.train.state import state_logical_axes
+from repro.train.step import make_train_step
+
+FSDP_THRESHOLD = 5e9  # params; above this, shard "embed" over "data"
+WHISPER_DECODER_LEN = 448
+
+
+# ------------------------------------------------------------------ inputs
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> tuple[dict, dict]:
+    """ShapeDtypeStruct stand-ins for every model input + logical axes."""
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    act = cfg.dtype
+    if spec.kind == "train" or spec.kind == "prefill":
+        if cfg.family == "encdec":
+            # seq applies to the (stub-embedded) audio frames; decoder
+            # tokens are bounded by whisper's context.
+            sd = min(s, WHISPER_DECODER_LEN)
+            inputs = {
+                "src_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), act),
+                "tokens": jax.ShapeDtypeStruct((b, sd), i32),
+                "targets": jax.ShapeDtypeStruct((b, sd), i32),
+            }
+            axes = {
+                "src_embeds": ("batch", "seq", "embed_act"),
+                "tokens": ("batch", "seq"),
+                "targets": ("batch", "seq"),
+            }
+        else:
+            inputs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            axes = {
+                "tokens": ("batch", "seq"),
+                "targets": ("batch", "seq"),
+            }
+            if cfg.family == "vlm":
+                inputs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_model), act)
+                axes["image_embeds"] = ("batch", None, "embed_act")
+        if spec.kind == "prefill":
+            inputs.pop("targets")
+            axes.pop("targets")
+        return inputs, axes
+
+    # decode: one new token against a seq_len-deep cache/state
+    inputs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+    }
+    axes = {"tokens": ("batch", None), "pos": ("batch",)}
+    return inputs, axes
+
+
+# ------------------------------------------------------------------ plans
+
+
+def plan_for_cell(cfg: ModelConfig, spec: ShapeSpec, mesh,
+                  overrides: dict | None = None) -> ShardingPlan:
+    fsdp = cfg.param_count_estimate() > FSDP_THRESHOLD
+    cache_seq_shard = spec.kind == "decode"
+    cache_axes: Any = ("data", "model") if spec.global_batch == 1 else "model"
+    return plan_for(
+        mesh,
+        fsdp=fsdp,
+        cache_seq_shard=cache_seq_shard,
+        cache_seq_axes=cache_axes,
+        overrides=overrides,
+    )
+
+
+# ------------------------------------------------------------------ steps
+
+
+def build_train_cell(cfg: ModelConfig, spec: ShapeSpec, plan: ShardingPlan):
+    """Abstract (state, batch) + shardings + step fn for a training cell."""
+    family = get_family(cfg)
+    optimizer = adamw(constant(1e-4))
+
+    with abstract_init():
+        params_sds, param_axes = family.init(jax.random.PRNGKey(0), cfg)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    state_sds = {
+        "params": params_sds,
+        "opt": opt_sds,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_axes = state_logical_axes(param_axes, opt_sds)
+
+    inputs, input_axes = input_specs(cfg, spec)
+    step = make_train_step(cfg, optimizer)
+    state_sh = shardings_for(state_sds, state_axes, plan)
+    input_sh = shardings_for(inputs, input_axes, plan)
+    return step, (state_sds, inputs), (state_sh, input_sh)
+
+
+def build_prefill_cell(cfg: ModelConfig, spec: ShapeSpec, plan: ShardingPlan):
+    """Forward-only (inference prefill) cell."""
+    family = get_family(cfg)
+
+    with abstract_init():
+        params_sds, param_axes = family.init(jax.random.PRNGKey(0), cfg)
+    inputs, input_axes = input_specs(cfg, spec)
+
+    from repro.models import rglru, rwkv6, transformer, vlm, whisper
+
+    if cfg.family in ("dense", "moe"):
+        fwd = lambda p, b: transformer.forward(p, b["tokens"], cfg)[0]
+    elif cfg.family == "rwkv":
+        fwd = lambda p, b: rwkv6.forward(p, b["tokens"], cfg)[0]
+    elif cfg.family == "rglru":
+        fwd = lambda p, b: rglru.forward(p, b["tokens"], cfg)[0]
+    elif cfg.family == "vlm":
+        fwd = lambda p, b: vlm.forward(p, b["tokens"], b["image_embeds"], cfg)[0]
+    else:
+        fwd = lambda p, b: whisper.forward(p, b["src_embeds"], b["tokens"], cfg)[0]
+
+    params_sh = shardings_for(params_sds, param_axes, plan)
+    input_sh = shardings_for(inputs, input_axes, plan)
+    return fwd, (params_sds, inputs), (params_sh, input_sh)
+
+
+def build_decode_cell(cfg: ModelConfig, spec: ShapeSpec, plan: ShardingPlan):
+    """serve_step: one token against a seq_len KV cache / recurrent state."""
+    family = get_family(cfg)
+
+    with abstract_init():
+        params_sds, param_axes = family.init(jax.random.PRNGKey(0), cfg)
+        state_sds, state_axes = family.init_decode_state(
+            cfg, spec.global_batch, spec.seq_len, abstract=True)
+    inputs, input_axes = input_specs(cfg, spec)
+
+    def serve_step(params, state, tokens, pos):
+        return family.decode(params, state, tokens, pos, cfg)
+
+    shard_tuple = (
+        shardings_for(params_sds, param_axes, plan),
+        shardings_for(state_sds, state_axes, plan),
+        shardings_for(inputs["tokens"], input_axes["tokens"], plan),
+        shardings_for(inputs["pos"], input_axes["pos"], plan),
+    )
+    abstract = (params_sds, state_sds, inputs["tokens"], inputs["pos"])
+    return serve_step, abstract, shard_tuple

@@ -1,0 +1,2 @@
+"""Model zoo: the paper's MobileNetV2-VWW models + the 10 assigned
+LM-family architectures (dense / MoE / SSM / hybrid / VLM / audio)."""

@@ -1,0 +1,152 @@
+"""Attention: GQA with RoPE/qk-norm/SWA, flash-chunked training path,
+cached decode path, and cross-attention.
+
+Training/prefill uses an online-softmax ("flash") formulation in plain
+jnp: an outer scan over query chunks and an inner scan over KV chunks,
+so peak score memory is q_chunk × kv_chunk regardless of sequence length
+(required for the 32k/500k shapes).  Decode (S_q == 1) uses the dense
+path over the (possibly sequence-sharded) KV cache; softmax reductions
+over a sharded KV axis become SPMD all-reduces — split-KV decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import shard
+
+NEG_INF = -1e30
+PAD_KV_POS = 2**30  # sentinel for empty/padded KV slots — always masked
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) absolute indices."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window: int | None, kv_len=None):
+    """(..., Sq, Skv) additive mask from position grids."""
+    m = jnp.zeros(q_pos.shape[:-1] + (q_pos.shape[-1], kv_pos.shape[-1]), jnp.float32)
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    m = jnp.where(kp >= PAD_KV_POS, NEG_INF, m)  # padded/empty slots
+    if causal:
+        m = jnp.where(kp > qp, NEG_INF, m)
+    if window is not None:
+        m = jnp.where(kp <= qp - window, NEG_INF, m)
+    if kv_len is not None:
+        m = jnp.where(kp >= kv_len[..., None, None], NEG_INF, m)
+    return m
+
+
+def dense_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                    kv_len=None, scale=None):
+    """Unchunked reference/decode path. q: (B,Sq,H,D); k,v: (B,Skv,H,D)."""
+    d = q.shape[-1]
+    scale = scale or d**-0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _mask(q_pos[:, None], kv_pos[:, None], causal=causal, window=window,
+                 kv_len=kv_len[:, None] if kv_len is not None else None)
+    scores = scores + mask
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                    kv_len=None, scale=None, q_chunk=1024, kv_chunk=1024):
+    """Online-softmax chunked attention (jnp flash).
+
+    Peak intermediate: (B, q_chunk, H, kv_chunk) scores — independent of
+    sequence length.  Exact (fp32 running max/denominator).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = scale or d**-0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # Pad seq dims to chunk multiples (masked out via positions).
+    pq = (-sq) % q_chunk
+    pkv = (-skv) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pkv)), constant_values=PAD_KV_POS)
+    nq = q.shape[1] // q_chunk
+    nkv = k.shape[1] // kv_chunk
+
+    q_c = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    qp_c = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    k_c = k.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    kp_c = kv_pos.reshape(b, nkv, kv_chunk).transpose(1, 0, 2)
+
+    def q_step(_, qc_inputs):
+        qc, qpc = qc_inputs  # (B, qc, H, D), (B, qc)
+
+        def kv_step(carry, kv_inputs):
+            m_run, l_run, acc = carry
+            kc, vc, kpc = kv_inputs
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpc[:, None], kpc[:, None], causal=causal, window=window,
+                        kv_len=kv_len[:, None] if kv_len is not None else None)
+            s = s + msk
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m_f, l_f, acc_f), _ = jax.lax.scan(kv_step, (m0, l0, a0), (k_c, v_c, kp_c))
+        out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)  # (B, qc, H, D)
+
+    _, outs = jax.lax.scan(q_step, None, (q_c, qp_c))  # (nq, B, qc, H, D)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def gqa_repeat(kv: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, K, D) → (B, S, H, D) by repeating each KV head H/K times."""
+    b, s, k, d = kv.shape
+    if k == n_heads:
+        return kv
+    reps = n_heads // k
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, k, reps, d)).reshape(
+        b, s, n_heads, d
+    )
+
+
+def attend(q, k, v, q_pos, kv_pos, *, causal=True, window=None, kv_len=None,
+           impl="flash", q_chunk=1024, kv_chunk=1024):
+    """Dispatch full-attention math; q (B,Sq,H,D), k/v already H heads."""
+    q = shard(q, "batch", "seq", "heads_act", None)
+    if impl == "dense" or q.shape[1] == 1:
+        out = dense_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                              window=window, kv_len=kv_len)
+    else:
+        out = flash_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                              window=window, kv_len=kv_len,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return shard(out, "batch", "seq", "heads_act", None)

@@ -1,0 +1,122 @@
+"""Uniform API over model families — the surface the trainer, the
+serving loop, and the dry-run all program against.
+
+Every family exposes:
+  init(key, cfg)                     → (params, logical_axes)
+  loss(params, batch, cfg)           → (scalar loss, metrics dict)
+  init_decode_state(cfg, B, T, abstract) → (state, logical_axes)
+  decode(params, state, tokens, pos, cfg) → (logits, new_state)
+  batch_keys(cfg)                    → input names the family consumes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rglru, rwkv6, transformer, vlm, whisper
+from repro.models.config import ModelConfig
+from repro.parallel import shard
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None):
+    """Mean next-token CE.  logits (B,S,V) fp32; targets (B,S) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - true
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def _accuracy(logits, targets):
+    return (logits.argmax(-1) == targets).mean()
+
+
+# ------------------------------------------------------------------ losses
+
+
+def _lm_loss(params, batch, cfg: ModelConfig):
+    logits, aux = transformer.forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux, "acc": _accuracy(logits, batch["targets"])}
+
+
+def _rwkv_loss(params, batch, cfg: ModelConfig):
+    logits, aux, _ = rwkv6.forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux, "acc": _accuracy(logits, batch["targets"])}
+
+
+def _rglru_loss(params, batch, cfg: ModelConfig):
+    logits, aux = rglru.forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux, "acc": _accuracy(logits, batch["targets"])}
+
+
+def _vlm_loss(params, batch, cfg: ModelConfig):
+    logits, aux = vlm.forward(params, batch["tokens"], batch["image_embeds"], cfg)
+    ce = cross_entropy(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux, "acc": _accuracy(logits, batch["targets"])}
+
+
+def _encdec_loss(params, batch, cfg: ModelConfig):
+    logits, aux = whisper.forward(params, batch["src_embeds"], batch["tokens"], cfg)
+    ce = cross_entropy(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux, "acc": _accuracy(logits, batch["targets"])}
+
+
+# ------------------------------------------------------------------ decode-state adapters
+
+
+def _lm_decode_state(cfg, batch, max_len, abstract=False):
+    return transformer.init_cache(cfg, batch, max_len, abstract=abstract)
+
+
+def _rwkv_decode_state(cfg, batch, max_len, abstract=False):
+    return rwkv6.init_rwkv_state(cfg, batch, abstract=abstract)
+
+
+def _rglru_decode_state(cfg, batch, max_len, abstract=False):
+    return rglru.init_rglru_state(cfg, batch, max_len, abstract=abstract)
+
+
+def _vlm_decode_state(cfg, batch, max_len, abstract=False):
+    return vlm.init_vlm_cache(cfg, batch, max_len, abstract=abstract)
+
+
+def _encdec_decode_state(cfg, batch, max_len, abstract=False):
+    return whisper.init_whisper_cache(cfg, batch, max_len, abstract=abstract)
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    init: Callable
+    loss: Callable
+    decode: Callable
+    init_decode_state: Callable
+    batch_keys: tuple[str, ...]
+
+
+FAMILIES: dict[str, Family] = {
+    "dense": Family(transformer.init_lm, _lm_loss, transformer.decode_step,
+                    _lm_decode_state, ("tokens", "targets")),
+    "moe": Family(transformer.init_lm, _lm_loss, transformer.decode_step,
+                  _lm_decode_state, ("tokens", "targets")),
+    "rwkv": Family(rwkv6.init_rwkv, _rwkv_loss, rwkv6.decode_step,
+                   _rwkv_decode_state, ("tokens", "targets")),
+    "rglru": Family(rglru.init_rglru, _rglru_loss, rglru.decode_step,
+                    _rglru_decode_state, ("tokens", "targets")),
+    "vlm": Family(vlm.init_vlm, _vlm_loss, vlm.decode_step,
+                  _vlm_decode_state, ("tokens", "targets", "image_embeds")),
+    "encdec": Family(whisper.init_whisper, _encdec_loss, whisper.decode_step,
+                     _encdec_decode_state, ("tokens", "targets", "src_embeds")),
+}
+
+
+def get_family(cfg: ModelConfig) -> Family:
+    return FAMILIES[cfg.family]

@@ -1,0 +1,95 @@
+"""Parameter construction with attached logical sharding axes.
+
+``make(key, shape, axes)`` returns a :class:`Spec` carrying both the
+initialized array and its logical axis names; ``split_tree`` separates a
+nested dict of Specs into (params, axes) trees — a single source of truth
+for shapes and shardings.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ABSTRACT = threading.local()
+
+
+@contextlib.contextmanager
+def abstract_init():
+    """Inside this context every ``make`` produces ShapeDtypeStructs —
+    allocation-free init for dry-runs at production scale."""
+    prev = getattr(_ABSTRACT, "on", False)
+    _ABSTRACT.on = True
+    try:
+        yield
+    finally:
+        _ABSTRACT.on = prev
+
+
+@dataclasses.dataclass
+class Spec:
+    value: Any  # jax.Array or ShapeDtypeStruct (abstract init)
+    axes: tuple
+
+
+def make(
+    key: jax.Array | None,
+    shape: tuple[int, ...],
+    axes: tuple,
+    *,
+    init: str = "normal",
+    scale: float | None = None,
+    dtype: Any = jnp.float32,
+    abstract: bool = False,
+) -> Spec:
+    """Create an initialized parameter (or an abstract stand-in).
+
+    init: "normal" (fan-in scaled), "zeros", "ones", "uniform" (±scale),
+    "constant" (scale everywhere).
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    if abstract or getattr(_ABSTRACT, "on", False):
+        return Spec(jax.ShapeDtypeStruct(shape, dtype), axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "constant":
+        v = jnp.full(shape, scale, dtype)
+    elif init == "uniform":
+        v = jax.random.uniform(key, shape, dtype, -scale, scale)
+    else:  # fan-in normal
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else (1.0 / np.sqrt(fan_in))
+        v = (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+    return Spec(v, axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def split_tree(tree: Any) -> tuple[Any, Any]:
+    """Nested dict of Specs → (params tree, axes tree)."""
+    if _is_spec(tree):
+        return tree.value, tree.axes
+    params, axes = {}, {}
+    for k, v in tree.items():
+        params[k], axes[k] = split_tree(v)
+    return params, axes
+
+
+class KeyGen:
+    """Deterministic stream of subkeys."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub

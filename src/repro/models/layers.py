@@ -1,0 +1,223 @@
+"""Shared transformer building blocks (params + forward), GQA/MoE-ready.
+
+Parameter trees are built from `init_utils.make` Specs so every leaf
+carries its logical sharding axes.  All per-layer params take a leading
+``n_layers`` dim when ``stacked=True`` (consumed by ``lax.scan``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import apply_rope, attend, dense_attention, gqa_repeat
+from repro.models.config import ModelConfig
+from repro.models.init_utils import KeyGen, Spec, make
+from repro.parallel import shard
+
+
+# ------------------------------------------------------------------ norms
+
+
+def rms_norm(x, scale, eps: float):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, L: tuple, name_axes=None) -> dict:
+    d = cfg.d_model
+    if name_axes is None:
+        name_axes = ("layers",) * len(L)
+    tree = {"scale": make(None, L + (d,), name_axes + ("embed_act",), init="zeros")}
+    if cfg.use_layernorm:
+        tree["bias"] = make(None, L + (d,), name_axes + ("embed_act",), init="zeros")
+    return tree
+
+
+def apply_norm(p: dict, x, cfg: ModelConfig):
+    if "bias" in p:
+        return layer_norm(x, 1.0 + p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ MLP
+
+
+def init_mlp(kg: KeyGen, cfg: ModelConfig, L: tuple, d_ff: int | None = None,
+             gated: bool = True) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.dtype
+    ls = ("layers",) * len(L)
+    tree = {
+        "wi": make(kg(), L + (d, ff), ls + ("embed", "mlp"), dtype=dt),
+        "wo": make(kg(), L + (ff, d), ls + ("mlp", "embed"), dtype=dt),
+    }
+    if gated:
+        tree["wg"] = make(kg(), L + (d, ff), ls + ("embed", "mlp"), dtype=dt)
+    return tree
+
+
+def apply_mlp(p: dict, x, activation: str = "silu"):
+    h = x @ p["wi"]
+    if "wg" in p:
+        g = x @ p["wg"]
+        act = jax.nn.silu(g) if activation == "silu" else jax.nn.gelu(g)
+        h = act * h
+    else:
+        h = jax.nn.gelu(h) if activation == "gelu" else jax.nn.silu(h)
+    h = shard(h, "batch", "seq", "mlp_act")
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------------ attention block
+
+
+def init_attention(kg: KeyGen, cfg: ModelConfig, L: tuple) -> dict:
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
+    dt = cfg.dtype
+    ls = ("layers",) * len(L)
+    tree = {
+        "wq": make(kg(), L + (d, qd), ls + ("embed", "heads"), dtype=dt),
+        "wk": make(kg(), L + (d, kvd), ls + ("embed", "kv_heads"), dtype=dt),
+        "wv": make(kg(), L + (d, kvd), ls + ("embed", "kv_heads"), dtype=dt),
+        "wo": make(kg(), L + (qd, d), ls + ("heads", "embed"), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        tree["bq"] = make(None, L + (qd,), ls + ("heads",), init="zeros", dtype=dt)
+        tree["bk"] = make(None, L + (kvd,), ls + ("kv_heads",), init="zeros", dtype=dt)
+        tree["bv"] = make(None, L + (kvd,), ls + ("kv_heads",), init="zeros", dtype=dt)
+    if cfg.qk_norm:
+        tree["q_norm"] = make(None, L + (hd,), ls + (None,), init="zeros")
+        tree["k_norm"] = make(None, L + (hd,), ls + (None,), init="zeros")
+    return tree
+
+
+def _project_qkv(p: dict, x, cfg: ModelConfig, positions, *, rope: bool = True):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p: dict, x, positions, cfg: ModelConfig, *,
+                    window: int | None = None, impl: str = "flash"):
+    """Full-sequence self-attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k = gqa_repeat(k, cfg.n_heads)
+    v = gqa_repeat(v, cfg.n_heads)
+    out = attend(q, k, v, positions, positions, causal=True, window=window,
+                 impl=impl)
+    out = out.reshape(b, s, cfg.q_dim)
+    return out @ p["wo"]
+
+
+# ------------------------------------------------------------------ KV cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  *, abstract: bool = False, window: int | None = None) -> dict:
+    """Per-layer stacked KV cache.  Sliding-window archs allocate only the
+    window (rolling buffer)."""
+    hd = cfg.resolved_head_dim
+    length = min(max_len, window) if window else max_len
+    shape = (n_layers, batch, length, cfg.n_kv_heads, hd)
+    axes = ("layers", "cache_batch", "cache_seq", "cache_heads", None)
+    mk = lambda: make(None, shape, axes, init="zeros", dtype=cfg.dtype,
+                      abstract=abstract)
+    return {"k": mk(), "v": mk()}
+
+
+def cached_attention(p: dict, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
+                     window: int | None = None, rope: bool = True):
+    """Single-token decode with cache update.
+
+    x: (B, 1, d); cache_k/v: (B, T, K, hd); pos: (B,) current index.
+    Returns (out (B,1,d), new_k, new_v).  For rolling (windowed) caches the
+    slot is ``pos % T``; positions for RoPE/causality stay absolute.
+    """
+    b = x.shape[0]
+    t = cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None], rope=rope)
+    slot = pos % t
+    upd = lambda c, new: jax.vmap(
+        lambda cb, nb, sb: jax.lax.dynamic_update_slice(cb, nb, (sb, 0, 0))
+    )(c, new.astype(c.dtype), slot)
+    new_k = upd(cache_k, k)
+    new_v = upd(cache_v, v)
+    new_k = shard(new_k, "cache_batch", "cache_seq", "cache_heads", None)
+    new_v = shard(new_v, "cache_batch", "cache_seq", "cache_heads", None)
+
+    # Absolute positions of cache slots (rolling-aware): slot i holds
+    # position  p_i = pos - ((slot - i) mod T)  … valid iff p_i >= 0.
+    idx = jnp.arange(t)[None, :]
+    kv_pos = pos[:, None] - ((slot[:, None] - idx) % t)
+    kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)  # empty slots masked
+
+    kr = gqa_repeat(new_k, cfg.n_heads)
+    vr = gqa_repeat(new_v, cfg.n_heads)
+    out = dense_attention(q, kr, vr, pos[:, None], kv_pos, causal=True,
+                          window=window)
+    out = out.reshape(b, 1, cfg.q_dim)
+    return out @ p["wo"], new_k, new_v
+
+
+# ------------------------------------------------------------------ embedding / head
+
+
+def init_embedding(kg: KeyGen, cfg: ModelConfig) -> dict:
+    """Embedding table + output head, padded to ``padded_vocab`` so the
+    vocab dim shards cleanly under TP (pad logits are masked in lm_head)."""
+    dt = cfg.dtype
+    tree: dict[str, Any] = {
+        "table": make(kg(), (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                      scale=cfg.d_model**-0.5, dtype=dt),
+        "final_norm": init_norm(cfg, (), ()),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = make(kg(), (cfg.d_model, cfg.padded_vocab),
+                            ("embed", "vocab"), dtype=dt)
+    return tree
+
+
+def embed_tokens(p: dict, tokens, cfg: ModelConfig):
+    x = jnp.take(p["table"], tokens, axis=0)
+    return shard(x, "batch", "seq", "embed_act")
+
+
+def mask_pad_vocab(logits, cfg: ModelConfig):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(idx < cfg.vocab, logits, -1e9)
+
+
+def lm_head(p: dict, x, cfg: ModelConfig):
+    x = apply_norm(p["final_norm"], x, cfg)
+    w = p["table"].T if cfg.tie_embeddings else p["head"]
+    logits = (x @ w).astype(jnp.float32)
+    logits = mask_pad_vocab(logits, cfg)
+    return shard(logits, "batch", "seq", "vocab_act")

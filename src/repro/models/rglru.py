@@ -1,0 +1,268 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved 2:1 with local (sliding-window, MQA) attention.
+
+Recurrent block: dual linear branches (signal + gate), short causal
+depthwise conv1d, RG-LRU gated diagonal recurrence
+
+    r_t = σ(x W_a + b_a);  i_t = σ(x W_x + b_x)
+    a_t = exp(−c · softplus(Λ) · r_t)            (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+computed with ``jax.lax.associative_scan`` (O(log S) depth — this is the
+sub-quadratic path that makes the 500k cell viable), GeGLU MLP after
+every block.  Decode carries (conv tail, h) per recurrent layer plus a
+rolling window cache per attention layer.
+
+Layer stack: ``n_groups = n_layers // len(pattern)`` scanned groups of
+(rec, rec, attn) + an unrolled all-recurrent tail for the remainder
+(38 = 12×3 + 2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.init_utils import KeyGen, make, split_tree
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    attention_block,
+    cached_attention,
+    embed_tokens,
+    init_attention,
+    init_embedding,
+    init_kv_cache,
+    init_mlp,
+    init_norm,
+    lm_head,
+)
+from repro.parallel import shard
+
+RGLRU_C = 8.0
+
+
+def _init_rec_block(kg: KeyGen, cfg: ModelConfig, L: tuple) -> dict:
+    d, dr = cfg.d_model, cfg.d_rnn or cfg.d_model
+    dt = cfg.dtype
+    return {
+        "wx": make(kg(), L + (d, dr), ("layers", "embed", "heads"), dtype=dt),
+        "wgate": make(kg(), L + (d, dr), ("layers", "embed", "heads"), dtype=dt),
+        "conv": make(kg(), L + (cfg.conv_width, dr), ("layers", "conv", "heads"),
+                     scale=0.1, dtype=dt),
+        "wa": make(kg(), L + (dr, dr), ("layers", "heads", "heads"), dtype=dt),
+        "ba": make(None, L + (dr,), ("layers", "heads"), init="zeros"),
+        "wi": make(kg(), L + (dr, dr), ("layers", "heads", "heads"), dtype=dt),
+        "bi": make(None, L + (dr,), ("layers", "heads"), init="zeros"),
+        "lam": make(None, L + (dr,), ("layers", "heads"), init="constant", scale=0.7),
+        "wo": make(kg(), L + (dr, d), ("layers", "heads", "embed"), dtype=dt),
+        "norm": init_norm(cfg, L),
+        "mlp_norm": init_norm(cfg, L),
+        "mlp": init_mlp(kg, cfg, L),
+    }
+
+
+def _init_attn_block(kg: KeyGen, cfg: ModelConfig, L: tuple) -> dict:
+    return {
+        "norm": init_norm(cfg, L),
+        "attn": init_attention(kg, cfg, L),
+        "mlp_norm": init_norm(cfg, L),
+        "mlp": init_mlp(kg, cfg, L),
+    }
+
+
+def _pattern_split(cfg: ModelConfig) -> tuple[int, int]:
+    p = len(cfg.block_pattern)
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig) -> tuple[dict, dict]:
+    kg = KeyGen(key)
+    n_groups, rem = _pattern_split(cfg)
+    assert all(b == "rec" for b in cfg.block_pattern[:rem]), "tail must be recurrent"
+    G = (n_groups,)
+    groups: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        groups[f"b{i}"] = (_init_rec_block(kg, cfg, G) if kind == "rec"
+                           else _init_attn_block(kg, cfg, G))
+    tree: dict[str, Any] = {"embed": init_embedding(kg, cfg), "groups": groups}
+    if rem:
+        tree["tail"] = _init_rec_block(kg, cfg, (rem,))
+    return split_tree(tree)
+
+
+# ------------------------------------------------------------------ RG-LRU
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """h_t = a_t ⊙ h_{t−1} + b_t over axis 1, given h0 (B, D)."""
+    # fold h0 into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bv  # h_t for every t
+
+
+def _rec_block(p: dict, x, state, cfg: ModelConfig):
+    """x: (B, S, d); state: {conv (B, W−1, dr), h (B, dr)} or None."""
+    b, s, _ = x.shape
+    dr = cfg.d_rnn or cfg.d_model
+    w = cfg.conv_width
+    h_in = apply_norm(p["norm"], x, cfg)
+    xb = h_in @ p["wx"]
+    gate = h_in @ p["wgate"]
+    xb = shard(xb, "batch", "seq", "heads_act")
+
+    conv_tail = state["conv"] if state is not None else jnp.zeros(
+        (b, w - 1, dr), xb.dtype)
+    xc = jnp.concatenate([conv_tail.astype(xb.dtype), xb], axis=1)
+    # causal depthwise conv1d, width w
+    y = sum(xc[:, i : i + s, :] * p["conv"][i][None, None, :] for i in range(w))
+    new_conv_tail = xc[:, -(w - 1):, :] if w > 1 else conv_tail
+
+    r = jax.nn.sigmoid(y @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(y @ p["wi"] + p["bi"])
+    log_a = (-RGLRU_C * jax.nn.softplus(p["lam"]) * r).astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    bt = (beta * (i * y).astype(jnp.float32))
+    h0 = state["h"] if state is not None else jnp.zeros((b, dr), jnp.float32)
+    h = _rglru_scan(a, bt, h0)
+    new_state = {"conv": new_conv_tail, "h": h[:, -1]}
+    out = (jax.nn.gelu(gate) * h.astype(x.dtype)) @ p["wo"]
+    x = x + out
+    h2 = apply_norm(p["mlp_norm"], x, cfg)
+    x = shard(x + apply_mlp(p["mlp"], h2, activation="gelu"),
+              "batch", "seq", "embed_act")
+    return x, new_state
+
+
+def _attn_block(p: dict, x, positions, cfg: ModelConfig):
+    h = apply_norm(p["norm"], x, cfg)
+    x = x + attention_block(p["attn"], h, positions, cfg,
+                            window=cfg.sliding_window)
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    return shard(x + apply_mlp(p["mlp"], h, activation="gelu"),
+                 "batch", "seq", "embed_act")
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                     abstract=False):
+    """Decode state: rolling attn caches + recurrent (conv, h) per group."""
+    n_groups, rem = _pattern_split(cfg)
+    dr = cfg.d_rnn or cfg.d_model
+    n_rec = sum(1 for b in cfg.block_pattern if b == "rec")
+    n_attn = len(cfg.block_pattern) - n_rec
+    window = cfg.sliding_window or max_len
+    tree: dict[str, Any] = {
+        "rec_conv": make(None, (n_groups, n_rec, batch, cfg.conv_width - 1, dr),
+                         ("layers", None, "cache_batch", None, "state"),
+                         init="zeros", dtype=cfg.dtype, abstract=abstract),
+        "rec_h": make(None, (n_groups, n_rec, batch, dr),
+                      ("layers", None, "cache_batch", "state"),
+                      init="zeros", dtype=jnp.float32, abstract=abstract),
+        "attn": init_kv_cache(cfg, batch, min(window, max_len),
+                              n_groups * n_attn, abstract=abstract,
+                              window=cfg.sliding_window),
+    }
+    if rem:
+        tree["tail_conv"] = make(None, (rem, batch, cfg.conv_width - 1, dr),
+                                 ("layers", "cache_batch", None, "state"),
+                                 init="zeros", dtype=cfg.dtype, abstract=abstract)
+        tree["tail_h"] = make(None, (rem, batch, dr),
+                              ("layers", "cache_batch", "state"),
+                              init="zeros", dtype=jnp.float32, abstract=abstract)
+    return split_tree(tree)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            positions: jax.Array | None = None):
+    """tokens (B, S) → (logits, aux=0)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def group_fn(x, gp):
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "rec":
+                x, _ = _rec_block(gp[f"b{i}"], x, None, cfg)
+            else:
+                x = _attn_block(gp[f"b{i}"], x, positions, cfg)
+        return x
+
+    gfn = group_fn
+    if cfg.remat:
+        gfn = jax.checkpoint(
+            group_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, gp: (gfn(c, gp), None), x, params["groups"])
+    else:
+        n_groups, _ = _pattern_split(cfg)
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            x = gfn(x, gp)
+    if "tail" in params:
+        rem = jax.tree.leaves(params["tail"])[0].shape[0]
+        for i in range(rem):
+            tp = jax.tree.map(lambda a: a[i], params["tail"])
+            x, _ = _rec_block(tp, x, None, cfg)
+    return lm_head(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def decode_step(params: dict, state: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    """One-token decode.  tokens (B, 1); pos (B,)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    n_groups, rem = _pattern_split(cfg)
+    new_state = jax.tree.map(lambda a: a, state)  # shallow copy
+
+    rec_conv, rec_h = state["rec_conv"], state["rec_h"]
+    ck, cv = state["attn"]["k"], state["attn"]["v"]
+    nrc, nrh, nck, ncv = [], [], [], []
+    for g in range(n_groups):
+        gp = jax.tree.map(lambda a: a[g], params["groups"])
+        ri = ai = 0
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "rec":
+                st = {"conv": rec_conv[g, ri], "h": rec_h[g, ri]}
+                x, ns = _rec_block(gp[f"b{i}"], x, st, cfg)
+                nrc.append(ns["conv"])
+                nrh.append(ns["h"])
+                ri += 1
+            else:
+                li = g * 1 + ai  # one attn layer per group
+                p = gp[f"b{i}"]
+                h = apply_norm(p["norm"], x, cfg)
+                att, nk, nv = cached_attention(p["attn"], h, ck[li], cv[li],
+                                               pos, cfg, window=cfg.sliding_window)
+                x = x + att
+                h = apply_norm(p["mlp_norm"], x, cfg)
+                x = x + apply_mlp(p["mlp"], h, activation="gelu")
+                nck.append(nk)
+                ncv.append(nv)
+                ai += 1
+    n_rec = sum(1 for b_ in cfg.block_pattern if b_ == "rec")
+    new_state["rec_conv"] = jnp.stack(nrc).reshape(rec_conv.shape)
+    new_state["rec_h"] = jnp.stack(nrh).reshape(rec_h.shape)
+    new_state["attn"] = {"k": jnp.stack(nck), "v": jnp.stack(ncv)}
+    if rem:
+        ntc, nth = [], []
+        for i in range(rem):
+            tp = jax.tree.map(lambda a: a[i], params["tail"])
+            st = {"conv": state["tail_conv"][i], "h": state["tail_h"][i]}
+            x, ns = _rec_block(tp, x, st, cfg)
+            ntc.append(ns["conv"])
+            nth.append(ns["h"])
+        new_state["tail_conv"] = jnp.stack(ntc)
+        new_state["tail_h"] = jnp.stack(nth)
+    return lm_head(params["embed"], x, cfg), new_state

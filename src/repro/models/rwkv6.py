@@ -1,0 +1,271 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with
+data-dependent per-channel decay.
+
+Time-mix: token-shift ddlerp (static μ + low-rank data-dependent mix),
+projections r/k/v/g, data-dependent decay ``w_t = exp(−exp(ω_t))`` with
+``ω_t = ω₀ + tanh(x @ A) @ B``, matrix-valued WKV state per head
+(dk × dv), "bonus" u on the diagonal term, per-head GroupNorm, output
+gating.  Channel-mix: token-shifted squared-ReLU FFN with sigmoid
+receptance.
+
+Training uses a **chunked-parallel WKV** (GLA-style): intra-chunk is a
+masked matmul against cumulative decays; inter-chunk state flows through
+a ``lax.scan``.  Sub-chunks of 16 keep ``exp(ΔL)`` within fp32 range
+(log-decay clamped ≥ −5/token ⇒ |ΔL| ≤ 80 < 88).  Decode carries O(1)
+state: (token-shift vector, WKV matrix) per layer — this is why rwkv6-3b
+runs the 500k-context cell with a constant-size cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.init_utils import KeyGen, split_tree, make
+from repro.models.layers import (
+    apply_norm,
+    embed_tokens,
+    init_embedding,
+    init_norm,
+    lm_head,
+)
+from repro.parallel import shard
+
+LOG_DECAY_MIN = -5.0  # clamp on per-token log decay (numerical guard)
+WKV_CHUNK = 16
+
+
+def _mix_params(kg: KeyGen, cfg: ModelConfig, L: tuple, n_streams: int) -> dict:
+    d, r = cfg.d_model, cfg.rwkv_lora_dim
+    return {
+        "mu": make(None, L + (n_streams, d), ("layers", None, "embed_act"),
+                   init="zeros"),
+        "lora_a": make(kg(), L + (d, n_streams * r), ("layers", "embed", None),
+                       dtype=cfg.dtype),
+        "lora_b": make(kg(), L + (n_streams, r, d), ("layers", None, None, "embed"),
+                       scale=0.01, dtype=cfg.dtype),
+    }
+
+
+def init_rwkv(key: jax.Array, cfg: ModelConfig) -> tuple[dict, dict]:
+    kg = KeyGen(key)
+    L = (cfg.n_layers,)
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    h = cfg.n_rwkv_heads
+    r = cfg.rwkv_lora_dim
+    dt = cfg.dtype
+    layers: dict[str, Any] = {
+        "att_norm": init_norm(cfg, L),
+        "ffn_norm": init_norm(cfg, L),
+        "att": {
+            "mix": _mix_params(kg, cfg, L, 5),  # r,k,v,g,w streams
+            "wr": make(kg(), L + (d, d), ("layers", "embed", "heads"), dtype=dt),
+            "wk": make(kg(), L + (d, d), ("layers", "embed", "heads"), dtype=dt),
+            "wv": make(kg(), L + (d, d), ("layers", "embed", "heads"), dtype=dt),
+            "wg": make(kg(), L + (d, d), ("layers", "embed", "heads"), dtype=dt),
+            "wo": make(kg(), L + (d, d), ("layers", "heads", "embed"), dtype=dt),
+            "w0": make(None, L + (h, hd), ("layers", "state", None),
+                       init="constant", scale=-0.6),
+            "w_lora_a": make(kg(), L + (d, r), ("layers", "embed", None), dtype=dt),
+            "w_lora_b": make(kg(), L + (r, d), ("layers", None, "heads"),
+                             scale=0.01, dtype=dt),
+            "u": make(None, L + (h, hd), ("layers", "state", None),
+                      init="constant", scale=0.5),
+            "gn_scale": make(None, L + (h, hd), ("layers", "state", None), init="ones"),
+            "gn_bias": make(None, L + (h, hd), ("layers", "state", None), init="zeros"),
+        },
+        "ffn": {
+            "mix": _mix_params(kg, cfg, L, 2),  # r,k streams
+            "wk": make(kg(), L + (d, cfg.d_ff), ("layers", "embed", "mlp"), dtype=dt),
+            "wv": make(kg(), L + (cfg.d_ff, d), ("layers", "mlp", "embed"), dtype=dt),
+            "wr": make(kg(), L + (d, d), ("layers", "embed", "heads"), dtype=dt),
+        },
+    }
+    tree = {"embed": init_embedding(kg, cfg), "layers": layers}
+    return split_tree(tree)
+
+
+def _token_shift(x, prev):
+    """Shift right by one: (B, S, d) with prev (B, d) as token −1."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p: dict, x, xx, cfg: ModelConfig):
+    """Data-dependent lerp between x and shifted xx → one stream per μ row."""
+    n = p["mu"].shape[0]
+    r = cfg.rwkv_lora_dim
+    dx = xx - x
+    lo = jnp.tanh(x @ p["lora_a"])  # (B, S, n·r)
+    lo = lo.reshape(x.shape[0], x.shape[1], n, r)
+    adj = jnp.einsum("bsnr,nrd->bsnd", lo, p["lora_b"])
+    mix = p["mu"][None, None] + adj  # (B, S, n, d)
+    return x[:, :, None, :] + dx[:, :, None, :] * mix  # (B, S, n, d)
+
+
+# ------------------------------------------------------------------ WKV
+
+
+def wkv_naive(r, k, v, lw, u, state):
+    """Per-token scan reference.  r/k/v/lw: (B, S, H, D); state (B, H, D, D).
+
+    Returns (y (B,S,H,D), final state).  lw = log decay ≤ 0.
+    """
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp  # (B, H, D)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lwt)[..., None] * s + kv
+        return s_new, y
+
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, lw))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked(r, k, v, lw, u, state, chunk: int = WKV_CHUNK):
+    """Chunk-parallel WKV (exact vs `wkv_naive` up to fp error)."""
+    b, s, h, d = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = z(r), z(k), z(v), z(lw)
+    n = r.shape[1] // chunk
+    resh = lambda a: a.reshape(b, n, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)
+
+    def chunk_step(s0, inp):
+        rt, kt, vt, lwt = inp  # (B, C, H, D)
+        cum = jnp.cumsum(lwt, axis=1)  # L_t (inclusive)
+        cum_prev = cum - lwt  # L_{t-1}
+        total = cum[:, -1:]  # L_C
+        # inter: y_t += (r_t · exp(L_{t-1})) @ S0
+        q = rt * jnp.exp(cum_prev)
+        y = jnp.einsum("bchd,bhde->bche", q, s0)
+        # intra: A[t,s] = Σ_d r_t exp(L_{t-1} − L_s) k_s  (s < t)
+        kd = kt * jnp.exp(total - cum)  # k_s · exp(L_C − L_s)
+        qd = rt * jnp.exp(cum_prev - total)  # r_t · exp(L_{t-1} − L_C)
+        scores = jnp.einsum("bthd,bshd->bhts", qd, kd)
+        mask = jnp.tril(jnp.ones((rt.shape[1], rt.shape[1]), bool), -1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = y + jnp.einsum("bhts,bshe->bthe", scores, vt)
+        # diagonal (bonus u)
+        diag = jnp.einsum("bthd,hd,bthd->bth", rt, u, kt)
+        y = y + diag[..., None] * vt
+        # state: S_C = exp(L_C)·S0 + Σ_s exp(L_C − L_s) k_s v_s
+        s_new = jnp.exp(total[:, 0])[..., None] * s0 + jnp.einsum(
+            "bshd,bshe->bhde", kd, vt)
+        return s_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n * chunk, h, d)
+    return y[:, :s_orig] if (s_orig := s) != y.shape[1] else y, state
+
+
+def _time_mix(p: dict, x, prev_tok, wkv_state, cfg: ModelConfig, *,
+              chunked: bool = True):
+    b, s, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xx = _token_shift(x, prev_tok)
+    streams = _ddlerp(p["mix"], x, xx, cfg)  # (B, S, 5, d)
+    xr, xk, xv, xg, xw = [streams[:, :, i] for i in range(5)]
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    omega = p["w0"].reshape(1, 1, h, hd) + (jnp.tanh(xw @ p["w_lora_a"])
+                                            @ p["w_lora_b"]).reshape(b, s, h, hd)
+    lw = jnp.clip(-jnp.exp(omega.astype(jnp.float32)), LOG_DECAY_MIN, -1e-6)
+
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    fn = wkv_chunked if chunked else wkv_naive
+    y, wkv_state = fn(rf, kf, vf, lw, u, wkv_state)
+
+    # per-head GroupNorm
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y * p["gn_scale"][None, None] + p["gn_bias"][None, None]
+    y = y.reshape(b, s, d).astype(x.dtype) * g
+    return y @ p["wo"], x[:, -1, :], wkv_state
+
+
+def _channel_mix(p: dict, x, prev_tok, cfg: ModelConfig):
+    xx = _token_shift(x, prev_tok)
+    streams = _ddlerp(p["mix"], x, xx, cfg)
+    xr, xk = streams[:, :, 0], streams[:, :, 1]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    kk = shard(kk, "batch", "seq", "mlp_act")
+    rr = jax.nn.sigmoid(xr @ p["wr"])
+    return rr * (kk @ p["wv"]), x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, *, abstract=False):
+    h, hd, d = cfg.n_rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    L = (cfg.n_layers,)
+    tree = {
+        "att_shift": make(None, L + (batch, d), ("layers", "cache_batch", "embed_act"),
+                          init="zeros", dtype=cfg.dtype, abstract=abstract),
+        "ffn_shift": make(None, L + (batch, d), ("layers", "cache_batch", "embed_act"),
+                          init="zeros", dtype=cfg.dtype, abstract=abstract),
+        "wkv": make(None, L + (batch, h, hd, hd),
+                    ("layers", "cache_batch", "state", None, None),
+                    init="zeros", dtype=jnp.float32, abstract=abstract),
+    }
+    return split_tree(tree)
+
+
+def _layer(x, lp, state, cfg: ModelConfig, *, chunked=True):
+    h = apply_norm(lp["att_norm"], x, cfg)
+    att, att_shift, wkv = _time_mix(lp["att"], h, state["att_shift"],
+                                    state["wkv"], cfg, chunked=chunked)
+    x = x + att.astype(x.dtype)
+    h = apply_norm(lp["ffn_norm"], x, cfg)
+    ffn, ffn_shift = _channel_mix(lp["ffn"], h, state["ffn_shift"], cfg)
+    x = shard(x + ffn.astype(x.dtype), "batch", "seq", "embed_act")
+    new_state = {"att_shift": att_shift.astype(cfg.dtype),
+                 "ffn_shift": ffn_shift.astype(cfg.dtype),
+                 "wkv": wkv.astype(jnp.float32)}
+    return x, new_state
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            state: dict | None = None, *, chunked: bool = True):
+    """tokens (B,S) → (logits, aux=0, final_state)."""
+    b, s = tokens.shape
+    if state is None:
+        state, _ = init_rwkv_state(cfg, b)
+    x = embed_tokens(params["embed"], tokens, cfg)
+    layer_fn = functools.partial(_layer, cfg=cfg, chunked=chunked)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def body(carry, xs):
+        lp, st = xs
+        x, new_st = layer_fn(carry, lp, st)
+        return x, new_st
+
+    if cfg.scan_layers:
+        x, new_states = jax.lax.scan(body, x, (params["layers"], state))
+    else:
+        sts = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            st = jax.tree.map(lambda a: a[i], state)
+            x, ns = body(x, (lp, st))
+            sts.append(ns)
+        new_states = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+    logits = lm_head(params["embed"], x, cfg)
+    return logits, jnp.zeros((), jnp.float32), new_states
+
+
+def decode_step(params: dict, state: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    """One-token decode with O(1) state (pos unused — state is positionless)."""
+    logits, _, new_state = forward(params, tokens, cfg, state, chunked=False)
+    return logits, new_state

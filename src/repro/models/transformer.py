@@ -1,0 +1,127 @@
+"""Decoder-only LM: dense (qwen/llama/stablelm) and MoE (qwen3-moe,
+mixtral) families.  Layers run under ``lax.scan`` over stacked params
+with per-layer remat — the production configuration for 16-80 layer
+stacks (small HLO, checkpointed activations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.init_utils import KeyGen, split_tree
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    attention_block,
+    cached_attention,
+    embed_tokens,
+    init_attention,
+    init_embedding,
+    init_kv_cache,
+    init_mlp,
+    init_norm,
+    lm_head,
+)
+from repro.models.moe import apply_moe, init_moe
+from repro.parallel import shard
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> tuple[dict, dict]:
+    """Returns (params, logical_axes) trees.  Run under ``jax.eval_shape``
+    to get abstract shapes without allocation (dry-run path)."""
+    kg = KeyGen(key)
+    L = (cfg.n_layers,)
+    layers: dict[str, Any] = {
+        "attn_norm": init_norm(cfg, L),
+        "attn": init_attention(kg, cfg, L),
+        "mlp_norm": init_norm(cfg, L),
+    }
+    if cfg.family == "moe":
+        layers["moe"] = init_moe(kg, cfg, L)
+    else:
+        layers["mlp"] = init_mlp(kg, cfg, L)
+    tree = {"embed": init_embedding(kg, cfg), "layers": layers}
+    return split_tree(tree)
+
+
+def _layer(x, lp, positions, cfg: ModelConfig, *, impl: str):
+    h = apply_norm(lp["attn_norm"], x, cfg)
+    x = x + attention_block(lp["attn"], h, positions, cfg,
+                            window=cfg.sliding_window, impl=impl)
+    h = apply_norm(lp["mlp_norm"], x, cfg)
+    if "moe" in lp:
+        y, aux = apply_moe(lp["moe"], h, cfg)
+    else:
+        y, aux = apply_mlp(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    x = shard(x + y, "batch", "seq", "embed_act")
+    return x, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            positions: jax.Array | None = None, *, impl: str = "flash"):
+    """tokens: (B, S) → (logits (B, S, V) fp32, aux_loss scalar)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    layer_fn = functools.partial(_layer, positions=positions, cfg=cfg, impl=impl)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn, policy=REMAT_POLICY)
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            x, aux = layer_fn(carry[0], lp)
+            return (x, carry[1] + aux), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = layer_fn(x, lp)
+            aux = aux + a
+
+    return lm_head(params["embed"], x, cfg), aux
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, abstract=False):
+    cache = init_kv_cache(cfg, batch, max_len, cfg.n_layers,
+                          abstract=abstract, window=cfg.sliding_window)
+    return split_tree(cache)
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    """One-token decode.  tokens: (B, 1); pos: (B,) absolute positions.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = apply_norm(lp["attn_norm"], x, cfg)
+        att, nk, nv = cached_attention(lp["attn"], h, ck, cv, pos, cfg,
+                                       window=cfg.sliding_window)
+        x = x + att
+        h = apply_norm(lp["mlp_norm"], x, cfg)
+        if "moe" in lp:
+            y, _ = apply_moe(lp["moe"], h, cfg)
+        else:
+            y = apply_mlp(lp["mlp"], h)
+        return x + y, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    new_cache = {"k": nk, "v": nv}
+    return lm_head(params["embed"], x, cfg), new_cache

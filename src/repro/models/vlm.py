@@ -1,0 +1,203 @@
+"""Llama-3.2-Vision-style VLM backbone: a decoder LM with gated
+cross-attention layers to image-patch embeddings every Nth layer.
+
+Per the brief the vision frontend is a **stub** — ``input_specs`` supply
+precomputed patch embeddings (B, N_img, d_model).  The framework's P²M
+integration point (`core.frontend.P2MFrontend`) can replace that stub
+with the in-pixel compressive embedder (see DESIGN.md §5).
+
+Layer stack: groups of (period−1 self layers + 1 gated cross layer),
+scanned over groups with an inner scan over the self layers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import dense_attention, gqa_repeat
+from repro.models.config import ModelConfig
+from repro.models.init_utils import KeyGen, make, split_tree
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    attention_block,
+    cached_attention,
+    embed_tokens,
+    init_attention,
+    init_embedding,
+    init_kv_cache,
+    init_mlp,
+    init_norm,
+    lm_head,
+)
+from repro.parallel import shard
+
+
+def _n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    period = cfg.cross_attn_period
+    assert period > 1 and cfg.n_layers % period == 0, (cfg.n_layers, period)
+    return cfg.n_layers // period, period - 1  # (groups, self layers per group)
+
+
+def init_vlm(key: jax.Array, cfg: ModelConfig) -> tuple[dict, dict]:
+    kg = KeyGen(key)
+    n_groups, n_self = _n_groups(cfg)
+    GS = (n_groups, n_self)
+    G = (n_groups,)
+    self_layers = {
+        "attn_norm": init_norm(cfg, GS, ("layers", "layers")),
+        "attn": init_attention(kg, cfg, GS),
+        "mlp_norm": init_norm(cfg, GS, ("layers", "layers")),
+        "mlp": init_mlp(kg, cfg, GS),
+    }
+    cross_layers = {
+        "norm": init_norm(cfg, G),
+        "attn": init_attention(kg, cfg, G),
+        "gate_attn": make(None, G, ("layers",), init="zeros"),
+        "mlp_norm": init_norm(cfg, G),
+        "mlp": init_mlp(kg, cfg, G),
+        "gate_mlp": make(None, G, ("layers",), init="zeros"),
+    }
+    tree: dict[str, Any] = {
+        "embed": init_embedding(kg, cfg),
+        "self": self_layers,
+        "cross": cross_layers,
+    }
+    return split_tree(tree)
+
+
+def _fix_axes_for_double_stack(axes: dict) -> dict:
+    return axes  # self layers carry two leading stack dims, both unsharded
+
+
+def _cross_kv(p: dict, image_embeds: jax.Array, cfg: ModelConfig):
+    """Project image embeddings to this cross layer's K/V (no RoPE)."""
+    b, n, _ = image_embeds.shape
+    hd = cfg.resolved_head_dim
+    k = (image_embeds @ p["wk"]).reshape(b, n, cfg.n_kv_heads, hd)
+    v = (image_embeds @ p["wv"]).reshape(b, n, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _cross_block(p: dict, x, image_embeds, cfg: ModelConfig,
+                 kv: tuple | None = None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h = apply_norm(p["norm"], x, cfg)
+    q = (h @ p["attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if kv is None:
+        k, v = _cross_kv(p["attn"], image_embeds, cfg)
+    else:
+        k, v = kv
+    n_img = k.shape[1]
+    kr = gqa_repeat(k, cfg.n_heads)
+    vr = gqa_repeat(v, cfg.n_heads)
+    qpos = jnp.zeros((b, s), jnp.int32)
+    kpos = jnp.zeros((b, n_img), jnp.int32)
+    out = dense_attention(q, kr, vr, qpos, kpos, causal=False)
+    out = out.reshape(b, s, cfg.q_dim) @ p["attn"]["wo"]
+    x = x + (jnp.tanh(p["gate_attn"]) * out).astype(x.dtype)
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    x = x + (jnp.tanh(p["gate_mlp"]) * apply_mlp(p["mlp"], h)).astype(x.dtype)
+    return shard(x, "batch", "seq", "embed_act")
+
+
+def forward(params: dict, tokens: jax.Array, image_embeds: jax.Array,
+            cfg: ModelConfig, positions: jax.Array | None = None):
+    """tokens (B, S) + image_embeds (B, N_img, d) → (logits, aux=0)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = embed_tokens(params["embed"], tokens, cfg)
+    image_embeds = shard(image_embeds.astype(x.dtype), "batch", None, "embed_act")
+
+    def self_layer(x, lp):
+        h = apply_norm(lp["attn_norm"], x, cfg)
+        x = x + attention_block(lp["attn"], h, positions, cfg)
+        h = apply_norm(lp["mlp_norm"], x, cfg)
+        return shard(x + apply_mlp(lp["mlp"], h), "batch", "seq", "embed_act")
+
+    self_fn = self_layer
+    cross_fn = lambda cp, x: _cross_block(cp, x, image_embeds, cfg)
+    if cfg.remat:
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        self_fn = jax.checkpoint(self_layer, policy=policy)
+        cross_fn = jax.checkpoint(cross_fn, policy=policy)
+
+    def group_fn(x, gp):
+        sp, cp = gp
+        x, _ = jax.lax.scan(lambda c, lp: (self_fn(c, lp), None), x, sp)
+        return cross_fn(cp, x), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, gp: group_fn(c, gp),
+                            x, (params["self"], params["cross"]))
+    else:
+        n_groups, _ = _n_groups(cfg)
+        for g in range(n_groups):
+            sp = jax.tree.map(lambda a: a[g], params["self"])
+            cp = jax.tree.map(lambda a: a[g], params["cross"])
+            x, _ = group_fn(x, (sp, cp))
+    return lm_head(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_vlm_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                   abstract=False):
+    """Self-attn KV cache (n_layers_self stacked) + precomputed cross K/V."""
+    n_groups, n_self = _n_groups(cfg)
+    hd = cfg.resolved_head_dim
+    self_cache = init_kv_cache(cfg, batch, max_len, n_groups * n_self,
+                               abstract=abstract)
+    cross = {
+        "k": make(None, (n_groups, batch, cfg.n_image_tokens, cfg.n_kv_heads, hd),
+                  ("layers", "cache_batch", None, "cache_heads", None),
+                  init="zeros", dtype=cfg.dtype, abstract=abstract),
+        "v": make(None, (n_groups, batch, cfg.n_image_tokens, cfg.n_kv_heads, hd),
+                  ("layers", "cache_batch", None, "cache_heads", None),
+                  init="zeros", dtype=cfg.dtype, abstract=abstract),
+    }
+    return split_tree({"self": self_cache, "cross": cross})
+
+
+def prefill_cross_kv(params: dict, image_embeds: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V once per request (encoder side)."""
+    n_groups, _ = _n_groups(cfg)
+    ks, vs = [], []
+    for g in range(n_groups):
+        cp = jax.tree.map(lambda a: a[g], params["cross"])
+        k, v = _cross_kv(cp["attn"], image_embeds, cfg)
+        ks.append(k)
+        vs.append(v)
+    return {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    x = embed_tokens(params["embed"], tokens, cfg)
+    n_groups, n_self = _n_groups(cfg)
+    ck, cv = cache["self"]["k"], cache["self"]["v"]
+    nks, nvs = [], []
+    for g in range(n_groups):
+        for i in range(n_self):
+            li = g * n_self + i
+            lp = jax.tree.map(lambda a: a[g][i], params["self"])
+            h = apply_norm(lp["attn_norm"], x, cfg)
+            att, nk, nv = cached_attention(lp["attn"], h, ck[li], cv[li], pos, cfg)
+            x = x + att
+            h = apply_norm(lp["mlp_norm"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h)
+            nks.append(nk)
+            nvs.append(nv)
+        cp = jax.tree.map(lambda a: a[g], params["cross"])
+        kv = (cache["cross"]["k"][g], cache["cross"]["v"][g])
+        x = _cross_block(cp, x, None, cfg, kv=kv)
+    new_cache = {
+        "self": {"k": jnp.stack(nks), "v": jnp.stack(nvs)},
+        "cross": cache["cross"],
+    }
+    return lm_head(params["embed"], x, cfg), new_cache

@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder audio backbone (arXiv:2212.04356).
+
+The conv frame frontend is a **stub** per the brief: ``input_specs``
+supply precomputed frame embeddings (B, S_src, d_model) — in a real
+deployment that is the 2×conv1d stem (or, with ``--frontend p2m``, the
+in-pixel/in-sensor P²M compressive capture).  Encoder: bidirectional
+pre-LN transformer + sinusoidal positions.  Decoder: causal self-attn +
+cross-attn to the encoder output, learned positions, tied softmax head.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend, dense_attention, gqa_repeat
+from repro.models.config import ModelConfig
+from repro.models.init_utils import KeyGen, make, split_tree
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    cached_attention,
+    init_attention,
+    init_kv_cache,
+    init_mlp,
+    init_norm,
+    mask_pad_vocab,
+)
+from repro.parallel import shard
+
+MAX_DECODER_POSITIONS = 448
+
+
+def _sinusoid(length: int, d: int):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-dim * jnp.log(10000.0) / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_whisper(key: jax.Array, cfg: ModelConfig) -> tuple[dict, dict]:
+    kg = KeyGen(key)
+    Le = (cfg.n_encoder_layers,)
+    Ld = (cfg.n_layers,)
+    d = cfg.d_model
+    enc = {
+        "attn_norm": init_norm(cfg, Le),
+        "attn": init_attention(kg, cfg, Le),
+        "mlp_norm": init_norm(cfg, Le),
+        "mlp": init_mlp(kg, cfg, Le, gated=False),
+    }
+    dec = {
+        "self_norm": init_norm(cfg, Ld),
+        "self_attn": init_attention(kg, cfg, Ld),
+        "cross_norm": init_norm(cfg, Ld),
+        "cross_attn": init_attention(kg, cfg, Ld),
+        "mlp_norm": init_norm(cfg, Ld),
+        "mlp": init_mlp(kg, cfg, Ld, gated=False),
+    }
+    tree: dict[str, Any] = {
+        "token_embed": make(kg(), (cfg.padded_vocab, d), ("vocab", "embed"),
+                            scale=d**-0.5, dtype=cfg.dtype),
+        "pos_embed": make(kg(), (MAX_DECODER_POSITIONS, d), (None, "embed"),
+                          scale=0.01, dtype=cfg.dtype),
+        "enc": enc,
+        "enc_final_norm": init_norm(cfg, ()),
+        "dec": dec,
+        "dec_final_norm": init_norm(cfg, ()),
+    }
+    return split_tree(tree)
+
+
+def encode(params: dict, src_embeds: jax.Array, cfg: ModelConfig):
+    """(B, S_src, d) stub frame embeddings → encoder states."""
+    b, s, d = src_embeds.shape
+    x = src_embeds.astype(cfg.dtype) + _sinusoid(s, d).astype(cfg.dtype)[None]
+    x = shard(x, "batch", "seq", "embed_act")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def layer(x, lp):
+        h = apply_norm(lp["attn_norm"], x, cfg)
+        hd = cfg.resolved_head_dim
+        q = (h @ lp["attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = (h @ lp["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (h @ lp["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        out = attend(q, gqa_repeat(k, cfg.n_heads), gqa_repeat(v, cfg.n_heads),
+                     positions, positions, causal=False)
+        x = x + out.reshape(b, s, cfg.q_dim) @ lp["attn"]["wo"]
+        h = apply_norm(lp["mlp_norm"], x, cfg)
+        return shard(x + apply_mlp(lp["mlp"], h, activation="gelu"),
+                     "batch", "seq", "embed_act"), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(layer, x, params["enc"])
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def _decoder_cross(lp, x, enc_k, enc_v, cfg: ModelConfig):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h = apply_norm(lp["cross_norm"], x, cfg)
+    q = (h @ lp["cross_attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    n_src = enc_k.shape[1]
+    qpos = jnp.zeros((b, s), jnp.int32)
+    kpos = jnp.zeros((b, n_src), jnp.int32)
+    out = dense_attention(q, gqa_repeat(enc_k, cfg.n_heads),
+                          gqa_repeat(enc_v, cfg.n_heads), qpos, kpos,
+                          causal=False)
+    return x + out.reshape(b, s, cfg.q_dim) @ lp["cross_attn"]["wo"]
+
+
+def _cross_kv(lp, enc_out, cfg: ModelConfig):
+    b, n, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, n, cfg.n_kv_heads, hd)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, n, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def forward(params: dict, src_embeds: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig):
+    """Teacher-forced enc-dec forward → (logits (B, S_dec, V), aux=0)."""
+    enc_out = encode(params, src_embeds, cfg)
+    b, s = tokens.shape
+    x = jnp.take(params["token_embed"], tokens, axis=0)
+    x = x + params["pos_embed"][:s][None]
+    x = shard(x, "batch", "seq", "embed_act")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def layer(x, lp):
+        hd = cfg.resolved_head_dim
+        h = apply_norm(lp["self_norm"], x, cfg)
+        q = (h @ lp["self_attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = (h @ lp["self_attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (h @ lp["self_attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        out = attend(q, gqa_repeat(k, cfg.n_heads), gqa_repeat(v, cfg.n_heads),
+                     positions, positions, causal=True)
+        x = x + out.reshape(b, s, cfg.q_dim) @ lp["self_attn"]["wo"]
+        x = _decoder_cross(lp, x, *_cross_kv(lp, enc_out, cfg), cfg)
+        h = apply_norm(lp["mlp_norm"], x, cfg)
+        return shard(x + apply_mlp(lp["mlp"], h, activation="gelu"),
+                     "batch", "seq", "embed_act"), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(layer, x, params["dec"])
+    x = apply_norm(params["dec_final_norm"], x, cfg)
+    logits = (x @ params["token_embed"].T).astype(jnp.float32)
+    logits = mask_pad_vocab(logits, cfg)
+    return shard(logits, "batch", "seq", "vocab_act"), jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_whisper_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                       abstract=False):
+    hd = cfg.resolved_head_dim
+    n_src = cfg.max_source_positions
+    self_cache = init_kv_cache(cfg, batch, max_len, cfg.n_layers,
+                               abstract=abstract)
+    cross = {
+        "k": make(None, (cfg.n_layers, batch, n_src, cfg.n_kv_heads, hd),
+                  ("layers", "cache_batch", None, "cache_heads", None),
+                  init="zeros", dtype=cfg.dtype, abstract=abstract),
+        "v": make(None, (cfg.n_layers, batch, n_src, cfg.n_kv_heads, hd),
+                  ("layers", "cache_batch", None, "cache_heads", None),
+                  init="zeros", dtype=cfg.dtype, abstract=abstract),
+    }
+    return split_tree({"self": self_cache, "cross": cross})
+
+
+def prefill_cross_kv(params: dict, src_embeds: jax.Array, cfg: ModelConfig):
+    enc_out = encode(params, src_embeds, cfg)
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["dec"])
+        k, v = _cross_kv(lp, enc_out, cfg)
+        ks.append(k)
+        vs.append(v)
+    return {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    b = tokens.shape[0]
+    x = jnp.take(params["token_embed"], tokens, axis=0)
+    pos_clip = jnp.minimum(pos, MAX_DECODER_POSITIONS - 1)
+    x = x + params["pos_embed"][pos_clip][:, None, :]
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = apply_norm(lp["self_norm"], x, cfg)
+        att, nk, nv = cached_attention(lp["self_attn"], h, ck, cv, pos, cfg,
+                                       rope=False)
+        x = x + att
+        x = _decoder_cross(lp, x, xk, xv, cfg)
+        h = apply_norm(lp["mlp_norm"], x, cfg)
+        x = x + apply_mlp(lp["mlp"], h, activation="gelu")
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec"], cache["self"]["k"], cache["self"]["v"],
+         cache["cross"]["k"], cache["cross"]["v"]))
+    x = apply_norm(params["dec_final_norm"], x, cfg)
+    logits = (x @ params["token_embed"].T).astype(jnp.float32)
+    logits = mask_pad_vocab(logits, cfg)
+    return logits, {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}

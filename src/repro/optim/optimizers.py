@@ -1,0 +1,80 @@
+"""Optimizers (functional, optax-like minimal surface).
+
+SGD+momentum is the paper's training recipe (§5.1, momentum 0.9);
+AdamW is the LM-pretraining default.  Optimizer state mirrors the param
+tree (so it inherits the params' shardings — FSDP shards optimizer
+state for free), with global-norm clipping and decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params, step) -> (params, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr_fn: Callable, momentum: float = 0.9, clip_norm: float | None = None,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * (m + weight_decay
+                          * p.astype(jnp.float32))).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float | None = 1.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mh_scale = 1.0 / (1.0 - b1**t)
+        vh_scale = 1.0 / (1.0 - b2**t)
+
+        def upd(p, m_, v_):
+            u = (m_ * mh_scale) / (jnp.sqrt(v_ * vh_scale) + eps)
+            pf = p.astype(jnp.float32)
+            return (pf - lr * (u + weight_decay * pf)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,32 @@
+"""LR schedules.  ``step_decay`` is the paper's recipe (×0.2 at epoch
+35 and every 45 thereafter → expressed in steps by the caller)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(base_lr: float, boundaries: tuple[int, ...], factor: float = 0.2):
+    """Paper §5.1: LR decays by `factor` at each boundary step."""
+
+    def fn(step):
+        lr = jnp.asarray(base_lr, jnp.float32)
+        for b in boundaries:
+            lr = jnp.where(step >= b, lr * factor, lr)
+        return lr
+
+    return fn
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,76 @@
+"""Rule tables: how logical axes map onto the production mesh.
+
+The baseline plan is TP-over-"model" + DP-over-("pod","data"); large
+archs add FSDP ("embed" → "data") so parameters and optimizer state are
+fully sharded; long-context shapes add SP (sequence over "data") and
+decode shapes shard the KV cache sequence over "model" (split-KV /
+flash-decoding style — SPMD inserts the softmax combine collectives).
+
+``plan_for`` is the single knob the perf hillclimb turns.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from jax.sharding import Mesh
+
+from repro.parallel.axes import ShardingPlan
+
+# Baseline logical rules (training, moderate model size).
+BASE_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed_act": None,
+    "heads_act": "model",
+    "mlp_act": "model",
+    "vocab_act": "model",
+    # params
+    "embed": None,          # switched to "data" under FSDP
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+    "conv": None,
+    # decode caches / recurrent state
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_heads": "model",
+    "state": "model",
+}
+
+
+def plan_for(
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    seq_shard: bool = False,
+    cache_seq_shard: bool = False,
+    cache_seq_axes: Any = "model",
+    overrides: dict[str, Any] | None = None,
+) -> ShardingPlan:
+    """Build the sharding plan for an (arch × shape) cell.
+
+    fsdp: shard the params' "embed" dim (and expert dim fallback) over
+      "data" — ZeRO-3-style; needed for ≥7B archs to fit 16 GB/chip.
+    seq_shard: sequence parallelism for activations (long prefill).
+    cache_seq_shard: shard decode KV cache over ``cache_seq_axes``
+      (split-KV decode; use ("data","model") when batch == 1).
+    """
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules["embed"] = "data"
+    if seq_shard:
+        rules["seq"] = "data"
+        rules["batch"] = "pod"
+    if cache_seq_shard:
+        rules["cache_seq"] = cache_seq_axes
+    if overrides:
+        rules.update(overrides)
+    # optimizer-state axes mirror the param axes unless explicitly
+    # overridden (ZeRO-1: opt sharded more than params)
+    rules.setdefault("opt_embed", rules.get("embed"))
+    rules.setdefault("opt_mlp", rules.get("mlp"))
+    return ShardingPlan(mesh=mesh, rules=rules)

@@ -1,0 +1,32 @@
+"""Build NamedSharding trees from (shape tree, logical-axes tree).
+
+Logical-axes trees mirror the value trees structurally, with *tuples of
+axis names* as leaves — tuples are pytree containers, so this walks
+dicts manually instead of using ``jax.tree.map``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.axes import ShardingPlan, logical_spec
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def shardings_for(values: Any, axes: Any, plan: ShardingPlan) -> Any:
+    """values: tree of arrays / ShapeDtypeStructs; axes: matching tree of
+    logical-axis tuples → tree of NamedSharding."""
+    if _is_axes_leaf(axes):
+        shape = np.shape(values) if not hasattr(values, "shape") else values.shape
+        return NamedSharding(plan.mesh, logical_spec(shape, axes, plan))
+    assert isinstance(values, dict) and isinstance(axes, dict), (type(values), type(axes))
+    return {k: shardings_for(values[k], axes[k], plan) for k in values.keys()}
+
+
+def replicated(plan: ShardingPlan) -> NamedSharding:
+    return NamedSharding(plan.mesh, P())

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServeEngine, greedy_generate
+
+__all__ = ["Request", "ServeEngine", "greedy_generate"]

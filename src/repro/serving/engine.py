@@ -1,0 +1,149 @@
+"""Serving: batched decode with continuous batching.
+
+``ServeEngine`` maintains a fixed set of decode *slots* over one shared
+(jit-compiled) ``decode_step``.  Requests join free slots as others
+finish — no batch-boundary stalls.  Per-slot absolute positions ride in
+the ``pos`` vector; finished/inactive slots keep stepping on a pad token
+(their logits are ignored) so the compiled computation stays
+shape-stable — the standard static-batch continuous-batching trick.
+
+Prefill is token-by-token through the same decode step (correct for all
+families incl. recurrent state models; a chunked-prefill fast path is a
+documented extension point — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.families import get_family
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array,
+                    steps: int, max_len: int | None = None,
+                    eos_id: int | None = None):
+    """Simple batched greedy decode (no slot management).
+
+    prompts: (B, P) int32.  Returns (B, steps) generated tokens.
+    """
+    family = get_family(cfg)
+    b, p = prompts.shape
+    max_len = max_len or (p + steps)
+    state, _ = family.init_decode_state(cfg, b, max_len)
+    step_fn = jax.jit(lambda s, t, pos: family.decode(params, s, t, pos, cfg))
+
+    logits = None
+    for t in range(p):
+        logits, state = step_fn(state, prompts[:, t : t + 1],
+                                jnp.full((b,), t, jnp.int32))
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for i in range(steps):
+        out.append(tok[:, 0])
+        logits, state = step_fn(state, tok, jnp.full((b,), p + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return jnp.stack(out, axis=1)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 max_len: int = 2048, eos_id: int | None = None,
+                 pad_id: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.family = get_family(cfg)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.state, _ = self.family.init_decode_state(cfg, max_batch, max_len)
+        self._step = jax.jit(
+            lambda s, t, pos: self.family.decode(self.params, s, t, pos, cfg))
+        self.slots: list[Request | None] = [None] * max_batch
+        self._slot_pos = np.zeros(max_batch, np.int64)
+        self._slot_cursor = np.zeros(max_batch, np.int64)  # prompt cursor
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------- API
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _reset_slot(self, i: int) -> None:
+        """Zero slot i's state (batch axis = 1 across all state trees) so a
+        recycled slot never sees the previous request's KV / recurrent
+        state."""
+        self.state = jax.tree.map(lambda a: a.at[:, i].set(0), self.state)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._reset_slot(i)
+                self.slots[i] = req
+                self._slot_pos[i] = 0
+                self._slot_cursor[i] = 0
+
+    def step(self) -> None:
+        """One engine tick: every active slot advances one token."""
+        self._admit()
+        tokens = np.full((self.max_batch, 1), self.pad_id, np.int32)
+        pos = np.zeros(self.max_batch, np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cur = int(self._slot_cursor[i])
+            if cur < len(req.prompt):
+                tokens[i, 0] = req.prompt[cur]
+            elif req.output:
+                tokens[i, 0] = req.output[-1]
+            else:
+                tokens[i, 0] = self.pad_id
+            pos[i] = self._slot_pos[i]
+
+        logits, self.state = self._step(self.state, jnp.asarray(tokens),
+                                        jnp.asarray(pos))
+        nxt = np.asarray(jax.device_get(jnp.argmax(logits[:, -1], axis=-1)))
+
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._slot_pos[i] += 1
+            cur = int(self._slot_cursor[i])
+            if cur < len(req.prompt) - 1:
+                self._slot_cursor[i] = cur + 1
+                continue
+            if cur == len(req.prompt) - 1:
+                self._slot_cursor[i] = cur + 1  # prompt consumed; start emitting
+            tok = int(nxt[i])
+            req.output.append(tok)
+            if (self.eos_id is not None and tok == self.eos_id) or \
+                    len(req.output) >= req.max_new_tokens or \
+                    self._slot_pos[i] >= self.max_len - 1:
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = None  # slot freed; NOTE: state slot reused —
+                # fresh requests overwrite positions from 0 so stale KV
+                # beyond the new request's positions is masked by kv_pos.
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.completed

@@ -1,0 +1,5 @@
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, StragglerMonitor
+
+__all__ = ["TrainState", "make_train_step", "Trainer", "StragglerMonitor"]

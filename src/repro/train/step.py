@@ -1,0 +1,84 @@
+"""Train-step builder: loss → grad → (optional compression) → optimizer.
+
+The returned step is a pure function suitable for ``jax.jit`` with
+shardings derived from logical axes (the launcher wires those).  Grad
+accumulation (microbatching) runs as a ``lax.scan`` over microbatch
+slices — the standard memory lever when activations dominate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.families import get_family
+from repro.optim.optimizers import Optimizer
+from repro.train.compression import compress_grads_int8_ef
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    accum_steps: int = 1,
+    grad_compression: str | None = None,  # None | "int8_ef"
+) -> Callable:
+    family = get_family(cfg)
+
+    def loss_fn(params, batch):
+        return family.loss(params, batch, cfg)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (g0, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {}
+
+        extras = dict(state.get("extras", {}))
+        if grad_compression == "int8_ef":
+            grads, extras["ef_error"] = compress_grads_int8_ef(
+                grads, extras.get("ef_error"))
+
+        new_params, new_opt = optimizer.update(grads, state["opt"], params,
+                                               state["step"])
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if extras:
+            new_state["extras"] = extras
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    family = get_family(cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = family.loss(params, batch, cfg)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return metrics
+
+    return eval_step

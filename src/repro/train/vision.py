@@ -1,0 +1,51 @@
+"""Training step for the paper's VWW pipeline (MobileNetV2 ± P²M stem).
+
+Keeps BN running stats in the train state (paper trains with standard
+BN and SGD+momentum, §5.1)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mobilenetv2 import MNV2Config, apply_mnv2
+from repro.optim.optimizers import Optimizer
+from repro.core.pixel_model import PixelModel
+
+
+def softmax_ce(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (lse - true).mean()
+
+
+def make_vww_train_step(cfg: MNV2Config, optimizer: Optimizer,
+                        pixel_model: PixelModel | None = None) -> Callable:
+    def step(state: dict, batch: dict):
+        def loss_fn(params):
+            logits, new_bn = apply_mnv2(params, state["bn"], batch["images"],
+                                        cfg, pixel_model, train=True)
+            ce = softmax_ce(logits, batch["labels"])
+            acc = (logits.argmax(-1) == batch["labels"]).mean()
+            return ce, (new_bn, acc)
+
+        (loss, (new_bn, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"], state["step"])
+        new_state = {"params": new_params, "bn": new_bn, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "acc": acc}
+
+    return step
+
+
+def make_vww_eval(cfg: MNV2Config, pixel_model: PixelModel | None = None):
+    def evaluate(params, bn_state, batch, p2m_deploy=None):
+        logits, _ = apply_mnv2(params, bn_state, batch["images"], cfg,
+                               pixel_model, train=False, p2m_deploy=p2m_deploy)
+        acc = (logits.argmax(-1) == batch["labels"]).mean()
+        return float(acc)
+
+    return evaluate

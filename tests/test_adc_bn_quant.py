@@ -1,0 +1,131 @@
+"""ADC counter semantics, BN folding, post-training quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adc import ADCConfig, adc_counts, adc_dequant, shifted_relu, ste_adc
+from repro.core.bn_fold import bn_affine, deploy_params, fold_error
+from repro.core.p2m_conv import (
+    P2MConvConfig,
+    apply_p2m_conv_deploy,
+    apply_p2m_conv_train,
+    extract_patches,
+    init_p2m_conv,
+    init_p2m_state,
+)
+from repro.core.pixel_model import default_pixel_model, fit_pixel_model
+from repro.core.quant import QuantSpec, fake_quant, quantize_deploy, quantize_symmetric
+
+ADC = ADCConfig()
+
+
+def test_adc_counts_clamp_and_preset():
+    v = jnp.array([-0.5, 0.0, 0.5, 2.0])
+    c = adc_counts(v, ADC, preset_counts=10)
+    assert c.dtype == jnp.int32
+    # 0.5/Δ = 127.4999… in fp32 → 127 counts, +10 preset
+    np.testing.assert_array_equal(np.asarray(c), [0, 10, 137, 255])
+
+
+def test_shifted_relu_matches_counts_dequant():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.uniform(-1, 2, 1000), jnp.float32)
+    shift = 0.1
+    soft = shifted_relu(v, shift, ADC)
+    hard = adc_dequant(adc_counts(v, ADC, preset_counts=round(shift / ADC.v_lsb)), ADC)
+    assert float(jnp.abs(soft - hard).max()) <= ADC.v_lsb  # ≤ 1 LSB apart
+
+
+def test_ste_adc_gradient_is_cliplinear():
+    v = jnp.asarray([-0.5, 0.3, 1.5])
+    g = jax.grad(lambda x: ste_adc(x, 0.0, ADC).sum())(v)
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_bn_affine():
+    gamma, beta = jnp.asarray([2.0]), jnp.asarray([1.0])
+    mean, var = jnp.asarray([0.5]), jnp.asarray([4.0])
+    a, b = bn_affine(gamma, beta, mean, var, eps=0.0)
+    x = jnp.linspace(-2, 2, 11)
+    direct = gamma * (x - mean) / jnp.sqrt(var) + beta
+    np.testing.assert_allclose(np.asarray(a * x + b), np.asarray(direct),
+                               rtol=1e-6)
+
+
+def _trained_like_params(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = init_p2m_conv(key, cfg)
+    state = init_p2m_state(cfg)
+    # make BN stats non-trivial
+    state = {"bn_mean": state["bn_mean"] + 0.1, "bn_var": state["bn_var"] * 0.5}
+    params["bn_gamma"] = params["bn_gamma"] * 0.8
+    params["bn_beta"] = params["bn_beta"] + 0.05
+    return params, state
+
+
+def test_fold_exact_for_linear_pixel_model():
+    cfg = P2MConvConfig()
+    lin = fit_pixel_model(degree_w=1, degree_x=3)
+    params, state = _trained_like_params(cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 20, 20, 3))
+    patches = extract_patches(imgs, 5, 5).reshape(-1, 75)
+    err = fold_error(params, state, cfg, lin, patches)
+    assert err < 1e-5  # linear-in-w ⇒ the paper's fold is exact
+
+
+def test_fold_error_small_for_degree3():
+    cfg = P2MConvConfig()
+    params, state = _trained_like_params(cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 20, 20, 3))
+    patches = extract_patches(imgs, 5, 5).reshape(-1, 75)
+    err = fold_error(params, state, cfg, default_pixel_model(), patches)
+    assert err < 0.05  # nonlinear residual, quantified (≈ LSBs)
+
+
+def test_train_vs_deploy_consistency():
+    """Eval-mode train form ≈ deploy form (≤ fold error + 1 LSB)."""
+    cfg = P2MConvConfig()
+    params, state = _trained_like_params(cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 20, 20, 3))
+    train_out, _ = apply_p2m_conv_train(params, state, imgs, cfg, train=False)
+    dep = deploy_params(params, state, cfg)
+    deploy_out = apply_p2m_conv_deploy(dep, imgs, cfg, quantize=True,
+                                       use_pallas=False)
+    assert float(jnp.abs(train_out - deploy_out).max()) < 0.08
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_quantize_idempotent(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-3, 3, (17, 5)), jnp.float32)
+    q1 = fake_quant(x, bits, axis=1)
+    q2 = fake_quant(q1, bits, axis=1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_symmetric_range():
+    x = jnp.asarray(np.random.default_rng(1).uniform(-2, 2, (64,)), jnp.float32)
+    q, scale = quantize_symmetric(x, 8)
+    assert int(jnp.abs(q).max()) <= 127
+    err = jnp.abs(jnp.asarray(q, jnp.float32) * scale - x).max()
+    assert float(err) <= float(scale) * 0.5 + 1e-7
+
+
+def test_quantize_deploy_monotone_error():
+    """Fig. 7(a) trend: fewer bits ⇒ more output deviation."""
+    cfg = P2MConvConfig()
+    params, state = _trained_like_params(cfg, seed=3)
+    dep = deploy_params(params, state, cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(4), (2, 20, 20, 3))
+    ref = apply_p2m_conv_deploy(dep, imgs, cfg, quantize=False, use_pallas=False)
+    errs = []
+    for bits in (8, 6, 4, 2):
+        depq = quantize_deploy(dep, QuantSpec(w_bits=bits, out_bits=bits))
+        cfgq = P2MConvConfig(n_bits=bits)
+        out = apply_p2m_conv_deploy(depq, imgs, cfgq, quantize=True,
+                                    use_pallas=False)
+        errs.append(float(jnp.abs(out - ref).mean()))
+    assert errs == sorted(errs)  # monotone non-decreasing as bits shrink

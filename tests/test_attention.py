@@ -1,0 +1,99 @@
+"""Flash (online-softmax chunked) attention vs the dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    apply_rope,
+    dense_attention,
+    flash_attention,
+    gqa_repeat,
+)
+
+
+def _qkv(b, s, h, d, seed=0, t=None):
+    rng = np.random.default_rng(seed)
+    t = t or s
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, t, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, t, h, d)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kp = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return q, k, v, qp, kp
+
+
+@pytest.mark.parametrize("s,qc,kc", [(64, 16, 16), (60, 16, 32), (128, 128, 128),
+                                     (37, 8, 8)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_dense(s, qc, kc, causal):
+    q, k, v, qp, kp = _qkv(2, s, 4, 16)
+    ref = dense_attention(q, k, v, qp, kp, causal=causal)
+    out = flash_attention(q, k, v, qp, kp, causal=causal, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [4, 16, 100])
+def test_flash_sliding_window(window):
+    q, k, v, qp, kp = _qkv(1, 48, 2, 8, seed=1)
+    ref = dense_attention(q, k, v, qp, kp, causal=True, window=window)
+    out = flash_attention(q, k, v, qp, kp, causal=True, window=window,
+                          q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_flash_gradients_match_dense():
+    q, k, v, qp, kp = _qkv(1, 32, 2, 8, seed=2)
+
+    def f_ref(q, k, v):
+        return (dense_attention(q, k, v, qp, kp, causal=True) ** 2).sum()
+
+    def f_flash(q, k, v):
+        return (flash_attention(q, k, v, qp, kp, causal=True,
+                                q_chunk=8, kv_chunk=8) ** 2).sum()
+
+    g1 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_gqa_repeat():
+    kv = jnp.arange(2 * 3 * 2 * 4, dtype=jnp.float32).reshape(2, 3, 2, 4)
+    rep = gqa_repeat(kv, 6)
+    assert rep.shape == (2, 3, 6, 4)
+    for g in range(3):
+        np.testing.assert_array_equal(np.asarray(rep[:, :, g]),
+                                      np.asarray(kv[:, :, 0]))
+        np.testing.assert_array_equal(np.asarray(rep[:, :, 3 + g]),
+                                      np.asarray(kv[:, :, 1]))
+
+
+def test_rope_relative_property():
+    """RoPE: ⟨q_m, k_n⟩ depends only on (m − n)."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]]), 10000.0)
+        kn = apply_rope(k, jnp.asarray([[n]]), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 40), st.integers(1, 4),
+       st.integers(0, 2**31 - 1))
+def test_flash_matches_dense_property(b, s, h, seed):
+    q, k, v, qp, kp = _qkv(b, s, h, 8, seed=seed)
+    ref = dense_attention(q, k, v, qp, kp, causal=True)
+    out = flash_attention(q, k, v, qp, kp, causal=True, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-4,
+                               atol=5e-4)

@@ -1,0 +1,107 @@
+"""P²M frontend integration, pruned pixel model, HLO analyzer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.frontend import (
+    P2MFrontendConfig,
+    apply_p2m_frontend,
+    init_p2m_frontend,
+    init_p2m_frontend_state,
+)
+from repro.core.p2m_conv import P2MConvConfig
+from repro.core.pixel_model import (
+    default_pixel_model,
+    prune_pixel_model,
+    spice_surrogate,
+)
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def test_p2m_frontend_shapes():
+    cfg = P2MFrontendConfig(image_size=80, d_model=64, pool=2,
+                            conv=P2MConvConfig())
+    params = init_p2m_frontend(jax.random.PRNGKey(0), cfg)
+    state = init_p2m_frontend_state(cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 80, 80, 3))
+    emb, _ = apply_p2m_frontend(params, state, imgs, cfg, train=True)
+    assert emb.shape == (2, cfg.tokens, 64)
+    assert cfg.tokens == (80 // 5 // 2) ** 2
+    assert bool(jnp.all(jnp.isfinite(emb)))
+
+
+def test_p2m_frontend_feeds_vlm():
+    """P²M as the VLM's vision frontend (the --frontend p2m path)."""
+    from repro.configs import get_smoke_config
+    from repro.models import vlm
+
+    mcfg = get_smoke_config("llama-3.2-vision-11b").replace(dtype=jnp.float32)
+    fcfg = P2MFrontendConfig(image_size=40, d_model=mcfg.d_model, pool=4,
+                             conv=P2MConvConfig())
+    assert fcfg.tokens == 4  # 40/5/4 = 2 → 2² (forward takes any token count)
+    fparams = init_p2m_frontend(jax.random.PRNGKey(0), fcfg)
+    fstate = init_p2m_frontend_state(fcfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 40, 40, 3))
+    emb, _ = apply_p2m_frontend(fparams, fstate, imgs, fcfg)
+
+    params, _ = vlm.init_vlm(jax.random.PRNGKey(2), mcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, mcfg.vocab)
+    logits, _ = vlm.forward(params, toks, emb, mcfg)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_pruned_model_error_within_one_lsb():
+    m = default_pixel_model()
+    mp = prune_pixel_model(m, 0.06)
+    n_terms = int((np.abs(mp.coeffs) > 0).sum())
+    assert n_terms <= 5  # ≥ ~2x fewer MXU matmuls than the 9-term basis
+    w = np.random.default_rng(0).random(2000)
+    x = np.random.default_rng(1).random(2000)
+    err = np.abs(np.asarray(mp(w, x)) - spice_surrogate(w, x)).max()
+    assert err < 1.5 / 255  # ≈ 1 LSB of the 8-bit ADC
+
+
+HLO_SAMPLE = """\
+HloModule test, entry_computation_layout={()->f32[8,8]{1,0}}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main () -> f32[8,8] {
+  %c = f32[8,8]{1,0} constant({...})
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%z, %c)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analyzer_loop_multipliers():
+    r = analyze(HLO_SAMPLE)
+    # dot: 2·8·8·8 = 1024 flops × 5 trips
+    assert r["flops"] == 5 * 1024
+    assert r["collectives"]["all-reduce"]["count"] == 5
+    assert r["collectives"]["all-reduce"]["bytes"] == 5 * 8 * 8 * 4
+
+
+def test_hlo_parser_computations():
+    comps = parse_module(HLO_SAMPLE)
+    assert set(comps) == {"body", "cond", "main"}
+    assert comps["main"].entry
+    assert comps["body"].root.opcode == "tuple"

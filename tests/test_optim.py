@@ -1,0 +1,79 @@
+"""Optimizers, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, constant, cosine_warmup, sgd, step_decay
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+from repro.train.compression import compress_grads_int8_ef
+
+
+def _optimize(optimizer, steps=200):
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([1.5])}
+    state = optimizer.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for i in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = optimizer.update(g, state, params,
+                                         jnp.asarray(i, jnp.int32))
+    return float(loss(params))
+
+
+def test_sgd_converges_quadratic():
+    assert _optimize(sgd(constant(0.05), momentum=0.9)) < 1e-4
+
+
+def test_adamw_converges_quadratic():
+    assert _optimize(adamw(constant(0.05), weight_decay=0.0)) < 1e-4
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_step_decay_schedule():
+    fn = step_decay(1.0, boundaries=(10, 20), factor=0.2)
+    assert abs(float(fn(0)) - 1.0) < 1e-6
+    assert abs(float(fn(10)) - 0.2) < 1e-6
+    assert abs(float(fn(25)) - 0.04) < 1e-6
+
+
+def test_cosine_warmup_schedule():
+    fn = cosine_warmup(1.0, warmup=10, total=110, floor=0.1)
+    assert float(fn(0)) == 0.0
+    assert abs(float(fn(10)) - 1.0) < 1e-6
+    assert float(fn(110)) <= 0.1 + 1e-6
+    assert float(fn(5)) == 0.5
+
+
+def test_int8_ef_compression_unbiased_longrun():
+    """Error feedback: accumulated compressed grads track the true sum."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(64)
+    comp_sum = np.zeros(64)
+    err = None
+    for _ in range(300):
+        g = {"w": jnp.asarray(rng.normal(0, 1, 64), jnp.float32)}
+        deq, err = compress_grads_int8_ef(g, err)
+        true_sum += np.asarray(g["w"])
+        comp_sum += np.asarray(deq["w"])
+    # residual bounded by one quantization step, not growing with T
+    assert np.abs(true_sum - comp_sum).max() < 0.1
+
+
+def test_int8_ef_converges_on_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    opt = sgd(constant(0.05), momentum=0.9)
+    state = opt.init(params)
+    err = None
+    for i in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        g, err = compress_grads_int8_ef(g, err)
+        params, state = opt.update(g, state, params, jnp.asarray(i))
+    assert float(jnp.sum(params["w"] ** 2)) < 1e-3

@@ -1,0 +1,130 @@
+"""Pallas p2m_conv kernel vs the pure-jnp oracle: shape/dtype sweeps,
+gradient agreement, CDS sign-split and zero-padding invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adc import ADCConfig
+from repro.core.pixel_model import default_pixel_model, fit_pixel_model
+from repro.kernels.p2m_conv import p2m_matmul, p2m_matmul_jnp, p2m_matmul_ref
+
+MODEL = default_pixel_model()
+ADC = ADCConfig()
+
+
+def _data(m, k, n, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((m, k)), dtype)
+    w = jnp.asarray(rng.uniform(-1, 1, (k, n)), dtype)
+    s = jnp.asarray(rng.uniform(-0.2, 0.2, (n,)), jnp.float32)
+    return x, w, s
+
+
+# Shapes chosen to hit: exact paper geometry (75), non-multiples of the
+# 8/128 tile quanta in every dim, single row/col, >1 K tile.
+SHAPES = [(100, 75, 8), (1, 75, 8), (256, 128, 128), (130, 33, 5),
+          (64, 300, 16), (8, 1, 1), (1024, 75, 8)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("mode", ["raw", "relu", "quant"])
+def test_kernel_matches_ref(m, k, n, mode):
+    x, w, s = _data(m, k, n)
+    ref = (p2m_matmul_ref(x, w, MODEL, s, None) if mode == "raw" else
+           p2m_matmul_ref(x, w, MODEL, s, ADC, quantize=(mode == "quant")))
+    out = p2m_matmul(x, w, s, MODEL, ADC, mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+def test_kernel_dtypes(dtype, tol):
+    x, w, s = _data(128, 75, 8, dtype=dtype)
+    ref = p2m_matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                         MODEL, s, ADC)
+    out = p2m_matmul(x, w, s, MODEL, ADC, "relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_quant_mode_integer_exact():
+    """ADC output lands exactly on the count grid (counts·Δ)."""
+    x, w, s = _data(64, 75, 8, seed=5)
+    out = np.asarray(p2m_matmul(x, w, s, MODEL, ADC, "quant"))
+    counts = out / ADC.v_lsb
+    assert np.allclose(counts, np.round(counts), atol=1e-4)
+    assert counts.min() >= 0 and counts.max() <= ADC.max_count
+
+
+def test_gradients_match_jnp_path():
+    x, w, s = _data(48, 75, 8, seed=2)
+
+    def loss_pallas(x, w, s):
+        return (p2m_matmul(x, w, s, MODEL, ADC, "relu") ** 2).sum()
+
+    def loss_jnp(x, w, s):
+        return (p2m_matmul_jnp(x, w, s, MODEL, ADC, "relu") ** 2).sum()
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, s)
+    g2 = jax.grad(loss_jnp, argnums=(0, 1, 2))(x, w, s)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_quant_mode_ste_gradient():
+    """quant forward is stepped, but its gradient equals the relu path's."""
+    x, w, s = _data(32, 27, 4, seed=7)
+    gq = jax.grad(lambda xx: p2m_matmul(xx, w, s, MODEL, ADC, "quant").sum())(x)
+    gr = jax.grad(lambda xx: p2m_matmul_jnp(xx, w, s, MODEL, ADC, "relu").sum())(x)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(gr), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_cds_sign_split_equivalence():
+    """CDS double-sampling: out == Σ g(w⁺,x) − Σ g(w⁻,x) with w = w⁺ − w⁻."""
+    x, w, s = _data(40, 75, 6, seed=3)
+    wp = jnp.maximum(w, 0.0)
+    wn = jnp.maximum(-w, 0.0)
+    zero = jnp.zeros_like(s)
+    pos = p2m_matmul_jnp(x, wp, zero, MODEL, ADC, "raw")
+    neg = p2m_matmul_jnp(x, wn, zero, MODEL, ADC, "raw")
+    full = p2m_matmul_jnp(x, w, zero, MODEL, ADC, "raw")
+    np.testing.assert_allclose(np.asarray(pos - neg), np.asarray(full),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_zero_padding_exact():
+    """Padding K with zeros adds exactly nothing (i,j ≥ 1 basis)."""
+    x, w, s = _data(32, 50, 8, seed=4)
+    xp = jnp.pad(x, ((0, 0), (0, 30)))
+    wp = jnp.pad(w, ((0, 30), (0, 0)))
+    a = p2m_matmul_jnp(x, w, s, MODEL, ADC, "raw")
+    b = p2m_matmul_jnp(xp, wp, s, MODEL, ADC, "raw")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 96), st.integers(1, 12),
+       st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref_property(m, k, n, seed):
+    x, w, s = _data(m, k, n, seed=seed)
+    ref = p2m_matmul_ref(x, w, MODEL, s, ADC)
+    out = p2m_matmul(x, w, s, MODEL, ADC, "relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_degree1_model_reduces_to_matmul():
+    """With g(w,x) = w·x the whole layer is a plain (signed) matmul."""
+    lin = fit_pixel_model(degree_w=1, degree_x=1,
+                          samples_w=np.array([0.5, 1.0, 0.25]),
+                          samples_x=np.array([1.0, 0.5, 0.25]),
+                          samples_v=np.array([0.5, 0.5, 0.0625]))
+    x, w, s = _data(16, 12, 3, seed=9)
+    out = p2m_matmul_jnp(x, w, s, lin, ADC, "raw")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w + s),
+                               rtol=1e-4, atol=1e-5)

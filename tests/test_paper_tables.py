@@ -1,0 +1,91 @@
+"""Analytic reproduction of the paper's tables: bandwidth (Eq. 2-3),
+Table 2 (MAdds / peak memory), Fig. 8 EDP ratios."""
+import pytest
+
+from repro.core.bandwidth import FirstLayerGeom, bandwidth_reduction, compression_ratio
+from repro.core.energy import (
+    BASELINE_C_ENERGY,
+    BASELINE_DELAY,
+    N_PIX_BASELINE_C,
+    N_PIX_P2M,
+    P2M_DELAY,
+    P2M_ENERGY,
+    evaluate_model,
+    total_macs,
+)
+from repro.models.mobilenetv2 import MNV2Config, layer_census, peak_activation_bytes
+
+
+def test_bandwidth_reduction_table1():
+    geom = FirstLayerGeom()  # paper Table 1 values
+    br = bandwidth_reduction(geom)
+    assert abs(br - 18.75) < 1e-9  # Eq. 2 with Table 1 values (paper: "~21×")
+    assert abs(compression_ratio(geom) - 1 / 18.75) < 1e-12
+
+
+def test_bandwidth_scales_with_bits():
+    g8 = FirstLayerGeom(out_bits=8)
+    g4 = FirstLayerGeom(out_bits=4)
+    assert abs(bandwidth_reduction(g4) / bandwidth_reduction(g8) - 2.0) < 1e-9
+
+
+# paper Table 2 values: (MAdds G, peak MB); peak convention per column —
+# see models/mobilenetv2.py docstring.
+TABLE2 = {
+    ("baseline", 560): (1.93, 7.53),
+    ("p2m", 560): (0.27, 0.30),
+    ("baseline", 225): (0.31, 1.2),
+    ("p2m", 225): (0.05, 0.049),
+    ("baseline", 115): (0.09, 0.311),
+    ("p2m", 115): (0.01, 0.013),
+}
+
+
+@pytest.mark.parametrize("variant,res", list(TABLE2))
+def test_table2_reproduction(variant, res):
+    paper_madds, paper_peak = TABLE2[(variant, res)]
+    cfg = MNV2Config(variant=variant, image_size=res)
+    madds = total_macs(layer_census(cfg)) / 1e9
+    peak = peak_activation_bytes(cfg, fused_blocks=(variant == "p2m")) / 1e6
+    assert abs(madds - paper_madds) / paper_madds < 0.45  # counting conventions
+    assert abs(peak - paper_peak) / paper_peak < 0.06
+
+
+def test_table2_reduction_ratios():
+    """The headline ratios: ~7.15× MAdds, ~25.1× peak memory at 560²."""
+    base = MNV2Config(variant="baseline", image_size=560)
+    p2m = MNV2Config(variant="p2m", image_size=560)
+    madds_ratio = total_macs(layer_census(base)) / total_macs(layer_census(p2m))
+    peak_ratio = (peak_activation_bytes(base, fused_blocks=False)
+                  / peak_activation_bytes(p2m, fused_blocks=True))
+    assert 6.0 < madds_ratio < 8.0
+    assert 23.0 < peak_ratio < 27.0
+
+
+def test_fig8_edp_ratios():
+    """Energy ≤7.81×, delay ≤2.15×, EDP 16.76× / ~11× (paper §5.3)."""
+    p2m_census = layer_census(MNV2Config(variant="p2m", image_size=560))
+    base_census = layer_census(MNV2Config(variant="baseline", image_size=560))
+    rp = evaluate_model(p2m_census, N_PIX_P2M, P2M_ENERGY, P2M_DELAY)
+    rb = evaluate_model(base_census, N_PIX_BASELINE_C, BASELINE_C_ENERGY,
+                        BASELINE_DELAY)
+    energy_ratio = rb.energy_uj / rp.energy_uj
+    delay_ratio = rb.delay_sequential_ms / rp.delay_sequential_ms
+    edp_seq = rb.edp_sequential / rp.edp_sequential
+    edp_cons = rb.edp_conservative / rp.edp_conservative
+    assert abs(energy_ratio - 7.81) / 7.81 < 0.05
+    assert abs(delay_ratio - 2.15) / 2.15 < 0.08
+    assert abs(edp_seq - 16.76) / 16.76 < 0.05
+    assert abs(edp_cons - 11.0) / 11.0 < 0.15
+
+
+def test_sensing_energy_breakdown():
+    """P²M moves energy out of sensing+com: its sensor-side energy must be
+    ≪ baseline's (the point of Fig. 8a)."""
+    p2m_census = layer_census(MNV2Config(variant="p2m", image_size=560))
+    base_census = layer_census(MNV2Config(variant="baseline", image_size=560))
+    rp = evaluate_model(p2m_census, N_PIX_P2M, P2M_ENERGY, P2M_DELAY)
+    rb = evaluate_model(base_census, N_PIX_BASELINE_C, BASELINE_C_ENERGY,
+                        BASELINE_DELAY)
+    assert (rp.sens_energy_uj + rp.com_energy_uj) < 0.12 * (
+        rb.sens_energy_uj + rb.com_energy_uj)

@@ -1,0 +1,66 @@
+"""Pixel model: fit quality, structural constraints, Fig. 3 behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pixel_model import (
+    W_RANGE,
+    X_RANGE,
+    default_pixel_model,
+    fit_pixel_model,
+    linear_pixel_model,
+    spice_surrogate,
+)
+
+
+def test_fit_quality():
+    m = default_pixel_model()
+    assert m.fit_rmse < 1e-3
+    w = np.linspace(0, 1, 41)
+    x = np.linspace(0, 1, 41)
+    wg, xg = np.meshgrid(w, x)
+    err = np.abs(np.asarray(m(wg, xg)) - spice_surrogate(wg, xg))
+    assert err.max() < 5e-3
+
+
+def test_zero_boundaries():
+    """g(0, x) = 0 (no weight transistor) and g(w, 0) = 0 (CDS reset)."""
+    m = default_pixel_model()
+    x = np.linspace(0, 1, 17)
+    assert np.allclose(np.asarray(m(0.0, x)), 0.0, atol=1e-12)
+    assert np.allclose(np.asarray(m(x, 0.0)), 0.0, atol=1e-12)
+
+
+def test_monotone_in_w_and_x():
+    """Fig. 3(a): pixel output increases with weight and with light."""
+    m = default_pixel_model()
+    grid = np.linspace(0.05, 1.0, 24)
+    for fixed in (0.2, 0.5, 0.9):
+        gw = np.asarray(m(grid, fixed))
+        gx = np.asarray(m(fixed, grid))
+        assert np.all(np.diff(gw) > -1e-6)
+        assert np.all(np.diff(gx) > -1e-6)
+
+
+def test_linear_model_is_product():
+    m = linear_pixel_model()
+    w = np.random.default_rng(0).random(100)
+    x = np.random.default_rng(1).random(100)
+    assert np.allclose(np.asarray(m(w, x)), w * x, atol=1e-6)
+
+
+def test_fit_from_custom_samples():
+    rng = np.random.default_rng(3)
+    w, x = rng.random(500), rng.random(500)
+    v = 0.5 * w * x + 0.25 * (w * x) ** 2
+    m = fit_pixel_model(w, x, v, degree_w=2, degree_x=2)
+    assert m.fit_rmse < 1e-6
+    assert abs(m.term(1, 1) - 0.5) < 1e-6
+    assert abs(m.term(2, 2) - 0.25) < 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(W_RANGE[0], W_RANGE[1]), st.floats(X_RANGE[0], X_RANGE[1]))
+def test_fit_close_pointwise(w, x):
+    m = default_pixel_model()
+    assert abs(float(m(w, x)) - float(spice_surrogate(w, x))) < 5e-3

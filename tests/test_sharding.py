@@ -1,0 +1,111 @@
+"""Sharding-plan machinery: spec sanitization, rule tables, spec trees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.specs import input_specs, plan_for_cell
+from repro.parallel import plan_for, sanitize_spec, shard, use_plan
+from repro.parallel.axes import logical_spec
+from repro.parallel.sharding_utils import shardings_for
+
+
+def _mesh():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def _mesh16():
+    """Abstract 16-device mesh shape for sanitization tests (no devices
+    touched — sanitize only reads mesh.shape)."""
+    class FakeMesh:
+        shape = {"data": 4, "model": 4}
+    return FakeMesh()
+
+
+def test_sanitize_divisibility():
+    m = _mesh16()
+    spec = sanitize_spec((8, 12), P("data", "model"), m)
+    assert spec == P("data", "model")
+    spec = sanitize_spec((6, 12), P("data", "model"), m)  # 6 % 4 != 0
+    assert spec == P(None, "model")
+
+
+def test_sanitize_missing_axis():
+    m = _mesh16()
+    spec = sanitize_spec((8, 8), P(("pod", "data"), None), m)
+    assert spec == P("data", None)
+
+
+def test_sanitize_duplicate_axis_conflict():
+    """MoE fallback: expert takes 'model'; mlp dim loses the conflict."""
+    m = _mesh16()
+    spec = sanitize_spec((8, 16, 16), P("model", None, "model"), m)
+    assert spec == P("model", None, None)
+    # when the first dim is not divisible, the later dim inherits the axis
+    spec = sanitize_spec((6, 16, 16), P("model", None, "model"), m)
+    assert spec == P(None, None, "model")
+
+
+def test_logical_spec_resolution():
+    mesh = _mesh()
+    plan = plan_for(mesh)
+    spec = logical_spec((4, 8), ("batch", "seq"), plan)
+    # pod axis absent on single-pod mesh → dropped
+    assert spec == P("data", None)
+
+
+def test_shard_noop_outside_plan():
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", "seq")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fsdp_plan_shards_embed():
+    plan = plan_for(_mesh(), fsdp=True)
+    assert plan.rules["embed"] == "data"
+    plan2 = plan_for(_mesh(), fsdp=False)
+    assert plan2.rules["embed"] is None
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "mixtral-8x22b", "whisper-tiny",
+                                  "llama-3.2-vision-11b"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    inputs, axes = input_specs(cfg, spec)
+    assert set(inputs) == set(axes)
+    if spec.kind == "train":
+        assert inputs["tokens"].shape[0] == spec.global_batch
+        if cfg.family == "encdec":
+            assert inputs["src_embeds"].shape[1] == spec.seq_len
+            assert inputs["tokens"].shape[1] == 448
+        else:
+            assert inputs["tokens"].shape[1] == spec.seq_len
+    else:
+        assert inputs["tokens"].shape == (spec.global_batch, 1)
+
+
+def test_shardings_tree_structure():
+    mesh = _mesh()
+    plan = plan_for(mesh)
+    values = {"a": jnp.zeros((4, 8)), "b": {"c": jnp.zeros((2,))}}
+    axes = {"a": ("batch", "embed"), "b": {"c": ("heads",)}}
+    sh = shardings_for(values, axes, plan)
+    assert sh["a"].spec == P("data", None)
+    assert sh["b"]["c"].spec == P("model") or sh["b"]["c"].spec == P(None)
+
+
+def test_plan_for_cell_decode_uses_cache_sharding():
+    cfg = get_config("qwen3-32b")
+    mesh = _mesh()
+    plan = plan_for_cell(cfg, SHAPES["decode_32k"], mesh)
+    assert plan.rules["cache_seq"] == "model"
+    plan_b1 = plan_for_cell(cfg, SHAPES["long_500k"], mesh)
+    assert plan_b1.rules["cache_seq"] == ("data", "model")
+    plan_train = plan_for_cell(cfg, SHAPES["train_4k"], mesh)
+    assert plan_train.rules["cache_seq"] is None
+    assert plan_train.rules["embed"] == "data"  # 32B model → FSDP
