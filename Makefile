@@ -1,0 +1,19 @@
+# Convenience targets; `make verify` is the pre-merge gate (tier-1 tests
+# + a ~10 s benchmark smoke — no TPU required, see scripts/ci.sh).
+
+.PHONY: verify test bench bench-smoke tune-blocks
+
+verify:
+	bash scripts/ci.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench:
+	python benchmarks/run.py
+
+bench-smoke:
+	python benchmarks/run.py --smoke
+
+tune-blocks:
+	python benchmarks/hillclimb.py --p2m-blocks

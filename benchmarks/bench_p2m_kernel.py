@@ -1,19 +1,48 @@
 """P²M kernel benchmark: elementwise oracle vs basis-decomposed XLA vs
-Pallas (interpret) — the measurable side of the TPU adaptation
-(DESIGN.md §2).  The jnp-basis/oracle speedup on CPU is the same
-matmul-vs-elementwise restructuring that maps onto the MXU on TPU."""
+fused implicit-im2col conv vs Pallas — the measurable side of the TPU
+adaptation (DESIGN.md §2-§4).
+
+Two families of rows:
+
+* ``p2m_*`` — the patch-level inner product (unchanged baseline set; the
+  Pallas path is jitted like the others, so it no longer re-traces per
+  call).
+* ``p2m_conv_*`` / ``p2m_bwd_*`` — the fused-conv story tracked across
+  PRs in ``BENCH_p2m_conv.json``: fused (implicit im2col + basis premix)
+  vs the patch-materializing path at paper geometry (B ∈ {1, 8},
+  224×224×3, k=s=5) and an overlapping-stride case, plus the train-step
+  backward microbench (closed-form premixed VJP vs re-differentiating the
+  forward, which is what the old custom_vjp fallback paid).
+
+Off-TPU the Pallas rows run the kernel body in interpret mode (Python
+per grid step) — correctness-path timings, flagged ``interpret`` in the
+JSON and only measured at smoke size; the XLA fused-vs-patch comparison
+carries the perf signal there.
+"""
 from __future__ import annotations
+
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_json
 from repro.core.adc import ADCConfig
+from repro.core.p2m_conv import extract_patches
 from repro.core.pixel_model import default_pixel_model, prune_pixel_model
-from repro.kernels.p2m_conv import p2m_matmul, p2m_matmul_jnp, p2m_matmul_ref
+from repro.kernels.p2m_conv import (
+    p2m_conv_jnp,
+    p2m_conv_pallas,
+    p2m_matmul,
+    p2m_matmul_jnp,
+    p2m_matmul_ref,
+)
+from repro.kernels.p2m_conv.backward import epilogue_mask, p2m_backward_jnp
+from repro.kernels.p2m_conv.ops import _coeff_tuple
 
 ADC = ADCConfig()
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_p2m_conv.json"
 
 # (M, K, N): paper geometry per image = 112·112 patches × 75 × 8
 CASES = [
@@ -23,27 +52,47 @@ CASES = [
     ("big_patch", 4096, 147, 32),  # 7×7×3 kernel
 ]
 
+# (name, B, H, W, C, k, s): ISSUE geometry for the fused-conv trajectory.
+CONV_CASES = [
+    ("paper_b1", 1, 224, 224, 3, 5, 5),
+    ("paper_b8", 8, 224, 224, 3, 5, 5),
+    ("overlap_s2_b1", 1, 224, 224, 3, 5, 2),
+]
+CONV_CASES_SMOKE = [
+    ("smoke_b1", 1, 64, 64, 3, 5, 5),
+    ("smoke_overlap", 1, 64, 64, 3, 5, 2),
+]
 
-def run() -> None:
-    model = default_pixel_model()
-    for name, m, k, n in CASES:
+
+def _conv_data(b, h, w_dim, c, k, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = jnp.asarray(rng.random((b, h, w_dim, c)), jnp.float32)
+    w = jnp.asarray(rng.uniform(-1, 1, (k * k * c, n)), jnp.float32)
+    s = jnp.asarray(rng.uniform(-0.1, 0.1, (n,)), jnp.float32)
+    return imgs, w, s
+
+
+def _run_matmul_cases(model, *, smoke: bool) -> None:
+    iters = 2 if smoke else 5
+    cases = [("smoke", 2048, 75, 8)] if smoke else CASES
+    for name, m, k, n in cases:
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.random((m, k)), jnp.float32)
         w = jnp.asarray(rng.uniform(-1, 1, (k, n)), jnp.float32)
         s = jnp.zeros((n,), jnp.float32)
 
         jnp_fn = jax.jit(lambda x, w, s: p2m_matmul_jnp(x, w, s, model, ADC, "quant"))
-        t_basis = timeit(jnp_fn, x, w, s)
+        t_basis = timeit(jnp_fn, x, w, s, iters=iters)
         emit(f"p2m_basis_{name}", t_basis,
              f"M={m} K={k} N={n} (dw*dx matmuls, XLA)")
 
         pruned = prune_pixel_model(model, 0.06)
         pr_fn = jax.jit(lambda x, w, s: p2m_matmul_jnp(x, w, s, pruned, ADC, "quant"))
-        t_pr = timeit(pr_fn, x, w, s)
+        t_pr = timeit(pr_fn, x, w, s, iters=iters)
         emit(f"p2m_pruned4_{name}", t_pr,
              f"4-term basis (EXPERIMENTS.md SPerf A.2); {t_basis / t_pr:.2f}x vs 9-term")
 
-        if m <= 16384:
+        if m <= 16384 and not smoke:
             ref_fn = jax.jit(lambda x, w: p2m_matmul_ref(x, w, model, s, ADC,
                                                          quantize=True))
             t_ref = timeit(ref_fn, x, w, warmup=1, iters=3)
@@ -51,7 +100,103 @@ def run() -> None:
                  f"oracle; basis_speedup={t_ref / t_basis:.1f}x")
 
         if m <= 16384:
-            pl_fn = lambda x, w, s: p2m_matmul(x, w, s, model, ADC, "quant")
-            t_pl = timeit(pl_fn, x, w, s, warmup=1, iters=3)
-            emit(f"p2m_pallas_interpret_{name}", t_pl,
-                 "kernel body in interpret mode (correctness path)")
+            # Jitted like every other path — no per-call re-trace.
+            pl_fn = jax.jit(
+                lambda x, w, s: p2m_matmul(x, w, s, model, ADC, "quant"))
+            t_pl = timeit(pl_fn, x, w, s, warmup=1, iters=min(iters, 3))
+            tag = ("TPU kernel" if jax.default_backend() == "tpu"
+                   else "kernel body in interpret mode (correctness path)")
+            emit(f"p2m_pallas_{name}", t_pl, tag,
+                 interpret=jax.default_backend() != "tpu")
+
+
+def _run_conv_cases(model, *, smoke: bool) -> None:
+    """Fused implicit-im2col vs patch-materializing conv, paper geometry."""
+    coeffs = _coeff_tuple(model)
+    on_tpu = jax.default_backend() == "tpu"
+    iters = 2 if smoke else 5
+    cases = CONV_CASES_SMOKE if smoke else CONV_CASES
+    for name, b, h, w_dim, c, k, s in cases:
+        imgs, w, sh = _conv_data(b, h, w_dim, c, k)
+        ho = (h - k) // s + 1
+        wo = (w_dim - k) // s + 1
+        shape_info = dict(B=b, H=h, W=w_dim, C=c, k=k, s=s,
+                          M=b * ho * wo, K=k * k * c, N=int(w.shape[1]))
+
+        def patch_fn(imgs, w, sh):
+            patches = extract_patches(imgs, k, s)
+            xf = patches.reshape(-1, k * k * c)
+            return p2m_matmul_jnp(xf, w, sh, model, ADC, "quant")
+
+        t_patch = timeit(jax.jit(patch_fn), imgs, w, sh, iters=iters)
+        emit(f"p2m_conv_patches_{name}", t_patch,
+             f"extract_patches + basis matmul (HBM patch tensor)",
+             **shape_info)
+
+        fused_fn = jax.jit(lambda imgs, w, sh: p2m_conv_jnp(
+            imgs, w, sh, model, ADC, "quant", k, s))
+        t_fused = timeit(fused_fn, imgs, w, sh, iters=iters)
+        emit(f"p2m_conv_fused_{name}", t_fused,
+             f"implicit im2col + basis premix (XLA); "
+             f"{t_patch / t_fused:.2f}x vs patches",
+             speedup_vs_patches=t_patch / t_fused, **shape_info)
+
+        # Pallas kernel: the real-hardware row on TPU; at smoke size only
+        # in interpret mode (Python per grid step — not a perf number).
+        if on_tpu or smoke:
+            pl_fn = jax.jit(lambda imgs, w, sh: p2m_conv_pallas(
+                imgs, w, sh, kernel=k, stride=s, coeffs=coeffs,
+                mode="quant", interpret=not on_tpu))
+            t_pl = timeit(pl_fn, imgs, w, sh, warmup=1, iters=min(iters, 2))
+            emit(f"p2m_conv_pallas_{name}", t_pl,
+                 ("fused VMEM kernel" if on_tpu else
+                  "interpret mode (correctness path)"),
+                 interpret=not on_tpu,
+                 speedup_vs_patches=t_patch / t_pl, **shape_info)
+
+
+def _run_bwd_cases(model, *, smoke: bool) -> None:
+    """Train-step backward: closed-form premixed VJP (what the custom_vjp
+    now runs) vs re-differentiating the jnp forward (the old fallback)."""
+    coeffs = _coeff_tuple(model)
+    iters = 2 if smoke else 5
+    geoms = [("paper_1img", 112 * 112, 75, 8)]
+    if smoke:
+        geoms = [("smoke", 32 * 32, 75, 8)]
+    for name, m, k, n in geoms:
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.random((m, k)), jnp.float32)
+        w = jnp.asarray(rng.uniform(-1, 1, (k, n)), jnp.float32)
+        s = jnp.zeros((n,), jnp.float32)
+        g = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+
+        def old_bwd(x, w, s, g):
+            _, vjp = jax.vjp(
+                lambda xx, ww, ss: p2m_matmul_jnp(xx, ww, ss, model, ADC,
+                                                  "relu"), x, w, s)
+            return vjp(g)
+
+        def new_bwd(x, w, s, g):
+            raw = p2m_matmul_jnp(x, w, jnp.zeros_like(s), model, ADC, "raw")
+            g_eff = g * epilogue_mask(raw, s, mode="relu",
+                                      full_scale=ADC.full_scale)
+            gx, gw = p2m_backward_jnp(g_eff, w, x, coeffs)
+            return gx, gw, g_eff.sum(0)
+
+        t_old = timeit(jax.jit(old_bwd), x, w, s, g, iters=iters)
+        emit(f"p2m_bwd_jaxvjp_{name}", t_old,
+             "jax.vjp through the dw*dx forward expansion (old fallback)",
+             M=m, K=k, N=n)
+        t_new = timeit(jax.jit(new_bwd), x, w, s, g, iters=iters)
+        emit(f"p2m_bwd_closed_{name}", t_new,
+             f"closed-form premixed VJP; {t_old / t_new:.2f}x vs jax.vjp",
+             speedup_vs_jaxvjp=t_old / t_new, M=m, K=k, N=n)
+
+
+def run(smoke: bool = False) -> None:
+    model = default_pixel_model()
+    _run_matmul_cases(model, smoke=smoke)
+    _run_conv_cases(model, smoke=smoke)
+    _run_bwd_cases(model, smoke=smoke)
+    if not smoke:
+        write_json(BENCH_JSON, prefix="p2m_")

@@ -1,12 +1,15 @@
-"""Shared benchmark utilities: wall-clock timing + CSV emission."""
+"""Shared benchmark utilities: wall-clock timing + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
+import platform
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[dict] = []
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -22,6 +25,32 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
+    """Record one benchmark row (CSV to stdout, dict retained for JSON).
+
+    ``extra`` keyword fields (shapes, speedups, flags) land in the JSON
+    written by :func:`write_json` but are not printed, keeping the CSV
+    contract for existing consumers.
+    """
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived, **extra})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str | Path, prefix: str | None = None) -> Path:
+    """Dump recorded rows (optionally only names starting with ``prefix``)
+    plus run metadata, so perf trajectories are diffable across PRs."""
+    rows = [r for r in ROWS if prefix is None or r["name"].startswith(prefix)]
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+        },
+        "rows": rows,
+    }
+    path = Path(path)
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {path} ({len(rows)} rows)")
+    return path

@@ -101,6 +101,49 @@ ROUND3 = [
 ]
 
 
+def p2m_block_hillclimb() -> None:
+    """§Perf hillclimb for the P²M kernel block shapes (``--p2m-blocks``).
+
+    Runs the `kernels.p2m_conv.tune` autotuner over the paper-geometry
+    matmul and fused-conv signatures, then writes the per-candidate
+    timings + winners to benchmarks/results/p2m_blocks.json.  On TPU this
+    measures the real kernels; off-TPU it forces interpret mode on toy
+    shapes — exercising the tuner machinery, not producing perf numbers
+    (the JSON records which).
+    """
+    import jax
+
+    from repro.core.pixel_model import default_pixel_model
+    from repro.kernels.p2m_conv import tune
+    from repro.kernels.p2m_conv.ops import _coeff_tuple
+
+    coeffs = _coeff_tuple(default_pixel_model())
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu:
+        matmul_sigs = [(112 * 112, 75, 8), (8 * 112 * 112, 75, 8)]
+        conv_sigs = [(1, 224, 224, 3, 8, 5, 5), (8, 224, 224, 3, 8, 5, 5),
+                     (1, 224, 224, 3, 8, 5, 2)]
+    else:  # interpret mode: toy shapes, machinery-only
+        matmul_sigs = [(256, 75, 8)]
+        conv_sigs = [(1, 20, 20, 3, 8, 5, 5)]
+
+    for m, k, n in matmul_sigs:
+        best = tune.get_matmul_blocks(m, k, n, coeffs, "quant",
+                                      enable=True, interpret=not on_tpu,
+                                      iters=3 if on_tpu else 1)
+        print(f"p2m_matmul M={m} K={k} N={n} -> blocks {best}")
+    for b, h, w, c, n, kk, s in conv_sigs:
+        best = tune.get_conv_blocks(b, h, w, c, n, kk, s, coeffs, "quant",
+                                    enable=True, interpret=not on_tpu,
+                                    iters=3 if on_tpu else 1)
+        print(f"p2m_conv B={b} {h}x{w}x{c} k={kk} s={s} -> blocks {best}")
+
+    out = Path(__file__).resolve().parent / "results" / "p2m_blocks.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    tune.cache_dump(out)
+    print(f"wrote {out}")
+
+
 def term_summary(rec: dict) -> dict:
     from benchmarks.roofline import analyze_record
 
@@ -113,6 +156,10 @@ def term_summary(rec: dict) -> dict:
 
 def main() -> None:
     import sys as _sys
+
+    if "--p2m-blocks" in _sys.argv:
+        p2m_block_hillclimb()
+        return
 
     from repro.launch.dryrun import run_cell
 

@@ -2,6 +2,10 @@
 train/serve wall-clock, and the roofline report from the dry-run.
 
 Prints ``name,us_per_call,derived`` CSV rows (0 µs ⇒ analytic row).
+
+``--smoke`` runs only the P²M kernel micro-cases at reduced shapes and
+iteration counts (~10 s) — the CI guard (`make verify`) that catches
+kernel regressions without a TPU or a full bench sweep.
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv
     print("name,us_per_call,derived")
     from benchmarks import (
         bench_paper_tables,
@@ -22,6 +27,9 @@ def main() -> None:
         roofline,
     )
 
+    if smoke:
+        bench_p2m_kernel.run(smoke=True)
+        return
     bench_paper_tables.run()
     bench_fig7_quant.run()
     bench_p2m_kernel.run()

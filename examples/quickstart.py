@@ -62,7 +62,7 @@ def main():
     counts = deploy_out / cfg.adc.v_lsb
     print(f"deploy form: folded BN → shifted-ReLU ADC; outputs are exact "
           f"{cfg.n_bits}-bit counts (max={int(counts.max())}) — "
-          f"Pallas kernel, interpret mode on CPU")
+          f"fused implicit-im2col path (Pallas on TPU, XLA twin here)")
 
     # 4. the paper's analytics
     br = bandwidth_reduction(FirstLayerGeom())

@@ -73,18 +73,23 @@ def apply_p2m_frontend(
     *,
     train: bool = False,
     deploy: dict | None = None,
+    impl: str | None = None,
 ):
     """(B, H, W, 3) → (B, tokens, d_model) embeddings, plus new state.
 
     When ``deploy`` is given, the folded/quantized in-pixel path is used
-    (what the manufactured sensor would emit)."""
+    (what the manufactured sensor would emit).  ``impl`` selects the conv
+    implementation (fused implicit-im2col kernel by default — see
+    `core.p2m_conv._resolve_impl`)."""
     model = model or default_pixel_model()
     if deploy is not None:
-        fmap = apply_p2m_conv_deploy(deploy, images, cfg.conv, model)
+        fmap = apply_p2m_conv_deploy(deploy, images, cfg.conv, model,
+                                     impl=impl)
         new_state = state
     else:
         fmap, conv_state = apply_p2m_conv_train(
-            params["conv"], state["conv"], images, cfg.conv, model, train=train
+            params["conv"], state["conv"], images, cfg.conv, model,
+            train=train, impl=impl
         )
         new_state = {"conv": conv_state}
     b, h, w, c = fmap.shape

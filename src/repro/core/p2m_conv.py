@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.adc import ADCConfig
 from repro.core.pixel_model import PixelModel, default_pixel_model
-from repro.kernels.p2m_conv.ops import p2m_matmul, p2m_matmul_jnp
+from repro.kernels.p2m_conv.ops import p2m_conv, p2m_conv_jnp, p2m_matmul_jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +108,37 @@ def _flat_weights(theta: jax.Array, cfg: P2MConvConfig) -> jax.Array:
     return w.reshape(k * k * cfg.in_channels, cfg.out_channels)
 
 
+def _resolve_impl(impl: str | None) -> str:
+    """Conv implementation select: "pallas" (fused implicit-im2col kernel,
+    the TPU hot path), "fused" (same decomposition in XLA ops — the
+    off-TPU default), "patches" (extract_patches + p2m_matmul_jnp, the
+    reference fallback)."""
+    if impl is None:
+        return "pallas" if jax.default_backend() == "tpu" else "fused"
+    if impl not in ("pallas", "fused", "patches"):
+        raise ValueError(f"unknown p2m conv impl {impl!r}")
+    return impl
+
+
+def _conv_raw(images, w, cfg: P2MConvConfig, model: PixelModel,
+              impl: str) -> jax.Array:
+    """Pre-epilogue conv accumulation (B, Ho, Wo, Co) via the chosen impl."""
+    zero = jnp.zeros((cfg.out_channels,), jnp.float32)
+    if impl == "pallas":
+        return p2m_conv(images, w, zero, model, cfg.adc, "raw",
+                        cfg.kernel, cfg.stride)
+    if impl == "fused":
+        return p2m_conv_jnp(images, w, zero, model, cfg.adc, "raw",
+                            cfg.kernel, cfg.stride)
+    b = images.shape[0]
+    ho = cfg.out_spatial(images.shape[1])
+    wo = cfg.out_spatial(images.shape[2])
+    patches = extract_patches(images, cfg.kernel, cfg.stride)  # (B,P,K)
+    xf = patches.reshape(b * patches.shape[1], -1)
+    raw = p2m_matmul_jnp(xf, w, zero, model, cfg.adc, mode="raw")
+    return raw.reshape(b, ho, wo, cfg.out_channels)
+
+
 def apply_p2m_conv_train(
     params: dict,
     state: dict,
@@ -117,8 +148,13 @@ def apply_p2m_conv_train(
     *,
     train: bool = True,
     rng: jax.Array | None = None,
+    impl: str | None = None,
 ):
     """Train-form forward: conv(g) → BN → saturating ReLU.
+
+    ``impl`` selects the conv path (see `_resolve_impl`); the default is
+    the fused implicit-im2col kernel on TPU and its XLA twin elsewhere,
+    with ``"patches"`` as the materializing reference fallback.
 
     Returns ``(out (B, Ho, Wo, Co), new_state)``.
     """
@@ -126,12 +162,10 @@ def apply_p2m_conv_train(
     b = images.shape[0]
     ho = cfg.out_spatial(images.shape[1])
     wo = cfg.out_spatial(images.shape[2])
-    patches = extract_patches(images, cfg.kernel, cfg.stride)  # (B,P,K)
-    xf = patches.reshape(b * patches.shape[1], -1)
     w = _flat_weights(params["theta"], cfg)
 
-    zero = jnp.zeros((cfg.out_channels,), jnp.float32)
-    raw = p2m_matmul_jnp(xf, w, zero, model, cfg.adc, mode="raw")
+    raw = _conv_raw(images, w, cfg, model, _resolve_impl(impl))
+    raw = raw.reshape(b * ho * wo, cfg.out_channels)
     if model.read_noise_std > 0.0 and rng is not None:
         raw = raw + model.read_noise_std * jax.random.normal(rng, raw.shape, raw.dtype)
 
@@ -160,22 +194,32 @@ def apply_p2m_conv_deploy(
     *,
     quantize: bool = True,
     use_pallas: bool = True,
+    impl: str | None = None,
 ):
     """Deploy-form forward with folded BN: conv(g) → shifted-ReLU ADC.
 
     ``deploy`` holds ``w`` (k·k·C, Co) folded+clipped weights and ``shift``
-    (Co,) counter pre-load in volts (see `bn_fold`).
+    (Co,) counter pre-load in volts (see `bn_fold`).  The conv runs on the
+    fused implicit-im2col path (``impl``, `_resolve_impl`);
+    ``use_pallas=False`` is the back-compat spelling of
+    ``impl="patches"`` — the patch-materializing reference.
     """
     model = model or default_pixel_model()
+    mode = "quant" if quantize else "relu"
+    if impl is None and not use_pallas:
+        impl = "patches"
+    impl = _resolve_impl(impl)
+    if impl == "pallas":
+        return p2m_conv(images, deploy["w"], deploy["shift"], model,
+                        cfg.adc, mode, cfg.kernel, cfg.stride)
+    if impl == "fused":
+        return p2m_conv_jnp(images, deploy["w"], deploy["shift"], model,
+                            cfg.adc, mode, cfg.kernel, cfg.stride)
     b = images.shape[0]
     ho = cfg.out_spatial(images.shape[1])
     wo = cfg.out_spatial(images.shape[2])
     patches = extract_patches(images, cfg.kernel, cfg.stride)
     xf = patches.reshape(b * patches.shape[1], -1)
-    mode = "quant" if quantize else "relu"
-    fn = p2m_matmul if use_pallas else p2m_matmul_jnp
-    if use_pallas:
-        out = fn(xf, deploy["w"], deploy["shift"], model, cfg.adc, mode)
-    else:
-        out = fn(xf, deploy["w"], deploy["shift"], model, cfg.adc, mode=mode)
+    out = p2m_matmul_jnp(xf, deploy["w"], deploy["shift"], model, cfg.adc,
+                         mode=mode)
     return out.reshape(b, ho, wo, cfg.out_channels)

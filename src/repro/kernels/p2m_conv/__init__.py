@@ -1,4 +1,35 @@
-from repro.kernels.p2m_conv.ops import p2m_matmul, p2m_matmul_jnp
+from repro.kernels.p2m_conv.backward import (
+    p2m_backward,
+    p2m_backward_jnp,
+    p2m_bwd_dx_pallas,
+    p2m_bwd_dw_pallas,
+)
+from repro.kernels.p2m_conv.conv import (
+    conv_out_spatial,
+    im2col_matrix,
+    p2m_conv_pallas,
+    premix_weights,
+)
+from repro.kernels.p2m_conv.ops import (
+    p2m_conv,
+    p2m_conv_jnp,
+    p2m_matmul,
+    p2m_matmul_jnp,
+)
 from repro.kernels.p2m_conv.ref import p2m_matmul_ref
 
-__all__ = ["p2m_matmul", "p2m_matmul_jnp", "p2m_matmul_ref"]
+__all__ = [
+    "conv_out_spatial",
+    "im2col_matrix",
+    "p2m_backward",
+    "p2m_backward_jnp",
+    "p2m_bwd_dx_pallas",
+    "p2m_bwd_dw_pallas",
+    "p2m_conv",
+    "p2m_conv_jnp",
+    "p2m_conv_pallas",
+    "p2m_matmul",
+    "p2m_matmul_jnp",
+    "p2m_matmul_ref",
+    "premix_weights",
+]

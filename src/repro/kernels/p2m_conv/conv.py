@@ -1,0 +1,392 @@
+"""Fused implicit-im2col P²M convolution (DESIGN.md §3).
+
+The patch-materializing path (`core.p2m_conv.extract_patches` +
+`p2m_matmul`) round-trips a ``(B, P, k·k·C)`` patch tensor through HBM —
+a ~``k²/s²`` blow-up of the input for overlapping strides, and an extra
+O(input) transpose copy even in the paper's non-overlapping ``s == k``
+geometry.  The kernels here take NHWC images directly and gather each
+activation tile *in VMEM* via the block index map, so no patch tensor
+ever exists in HBM:
+
+* **fast path** (``stride == kernel``): the im2col matrix is a pure
+  reshape of the (cropped) image — ``(B·Ho, k, Wo, k·C)`` with the K
+  dimension split across the ``k`` kernel rows.  Zero-copy; the grid's
+  third dimension walks kernel rows ``dh`` and the block index map picks
+  ``A[mi·bh : , dh, :, :]`` straight out of the image.
+
+* **general path** (any ``stride < kernel``): a per-kernel-row band of
+  image rows (``k·B·Ho·W·C`` total — ≤ ``k/s``× the input, vs ``k²/s²``×
+  for im2col) is streamed through VMEM; the ``k`` sliding windows along W
+  are sliced out of the resident band with static strided views.
+
+Both paths share the **basis-premix** tile compute (DESIGN.md §2.3): with
+``g(w,x) = Σ_ij a_ij w^i x^j`` the accumulation is
+
+    raw = Σ_j (X^∘j) @ W̃_j,   W̃_j := Σ_i a_ij · sign(W) ⊙ |W|^∘i
+
+``W̃`` is precomputed outside the kernel (it is weight-sized, O(dx·K·N)),
+so each grid step issues ONE MXU dot of ``[X, X², …] @ [W̃_1; W̃_2; …]``
+instead of dw·dx separate passes.  The CDS/ADC epilogue (BN pre-load
+shift, counter ReLU clamp, optional integer-exact quantization) runs on
+the final kernel-row step, in VMEM.
+
+`p2m_conv_jnp` is the same decomposition expressed in XLA ops
+(differentiable, patch-free) — the CPU/GPU fallback and the autodiff
+reference for the Pallas backward kernels in `backward.py`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def conv_out_spatial(size: int, kernel: int, stride: int) -> int:
+    """VALID conv output extent."""
+    return (size - kernel) // stride + 1
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Round ``x`` up to a multiple of the tile quantum ``m`` — the one
+    copy shared by the forward/backward kernels and the tuner, so padding
+    and candidate enumeration can never disagree."""
+    return -(-x // m) * m
+
+
+def premix_weights(w, coeffs) -> jax.Array:
+    """Fold the pixel-polynomial w-powers into the weights.
+
+    w: (K, N) signed weights; coeffs: (dw, dx) nested floats.
+    Returns W̃ of shape (dx, K, N) with ``W̃[j-1] = Σ_i a_ij sign(w)|w|^i``
+    — after this, the P²M product is ``Σ_j X^∘j @ W̃_j`` (DESIGN.md §2.3).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    dw = len(coeffs)
+    dx = len(coeffs[0])
+    sgn = jnp.sign(w)
+    aw = jnp.abs(w)
+    pow_i = []  # sign(w)·|w|^i for i = 1..dw
+    wp = aw
+    for i in range(1, dw + 1):
+        pow_i.append(sgn * wp)
+        if i < dw:
+            wp = wp * aw
+    return jnp.stack(
+        [
+            sum(float(coeffs[i][j]) * pow_i[i] for i in range(dw))
+            for j in range(dx)
+        ],
+        axis=0,
+    )
+
+
+def _power_concat(x, dx: int):
+    """[x, x∘x, …, x^∘dx] along the last axis; x is fp32 (bm, kc)."""
+    xs = [x]
+    xp = x
+    for _ in range(dx - 1):
+        xp = xp * x
+        xs.append(xp)
+    return jnp.concatenate(xs, axis=-1) if dx > 1 else x
+
+
+def _epilogue_values(raw, shift, *, mode: str, v_lsb: float, max_count: int):
+    """Shared CDS/ADC epilogue on an fp32 accumulation tile."""
+    if mode == "raw":
+        return raw + shift
+    if mode == "relu":
+        return jnp.clip(raw + shift, 0.0, max_count * v_lsb)
+    if mode == "quant":
+        counts = jnp.round(raw / v_lsb) + jnp.round(shift / v_lsb)
+        return jnp.clip(counts, 0.0, float(max_count)) * v_lsb
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _accumulate_step(x2d, wmix2d, acc_ref, *, dx: int, first: jax.Array):
+    """One grid step: acc += [x, x², …] @ W̃-tile (single MXU dot)."""
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xcat = _power_concat(x2d.astype(jnp.float32), dx)
+    acc_ref[...] += jax.lax.dot_general(
+        xcat,
+        wmix2d.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _write_outputs(shift_ref, out_ref, raw_ref, acc_ref, *, last, mode,
+                   v_lsb, max_count):
+    @pl.when(last)
+    def _epilogue():
+        raw = acc_ref[...]
+        shift = shift_ref[...].astype(jnp.float32)  # (1, bn), broadcasts
+        out = _epilogue_values(raw, shift, mode=mode, v_lsb=v_lsb,
+                               max_count=max_count)
+        out_ref[...] = out.reshape(out_ref.shape).astype(out_ref.dtype)
+        if raw_ref is not None:
+            raw_ref[...] = raw.reshape(raw_ref.shape)
+
+
+def _conv_kernel_fast(a_ref, wmix_ref, shift_ref, *refs, k: int, dx: int,
+                      mode: str, v_lsb: float, max_count: int):
+    """stride == kernel: a_ref is (bh, 1, Wo, kC) — a zero-copy image view."""
+    out_ref, raw_ref, acc_ref = _split_refs(refs)
+    ki = pl.program_id(2)
+    bh, _, wo, kc = a_ref.shape
+    x2d = a_ref[...].reshape(bh * wo, kc)
+    wmix2d = wmix_ref[...].reshape(wmix_ref.shape[1], wmix_ref.shape[2])
+    _accumulate_step(x2d, wmix2d, acc_ref, dx=dx, first=ki == 0)
+    _write_outputs(shift_ref, out_ref, raw_ref, acc_ref, last=ki == k - 1,
+                   mode=mode, v_lsb=v_lsb, max_count=max_count)
+
+
+def _conv_kernel_general(band_ref, wmix_ref, shift_ref, *refs, k: int,
+                         stride: int, wo: int, dx: int, mode: str,
+                         v_lsb: float, max_count: int):
+    """General strided case: band_ref is (1, bh, Wpad, C) — one kernel-row
+    band of image rows; the k sliding windows are sliced out in VMEM."""
+    out_ref, raw_ref, acc_ref = _split_refs(refs)
+    ki = pl.program_id(2)
+    _, bh, wpad, c = band_ref.shape
+    band = band_ref[...].reshape(bh, wpad, c)
+    # Strided window gather, entirely on the VMEM-resident band: for each
+    # in-row kernel offset dw, rows ow·s + dw for ow ∈ [0, Wo).
+    parts = []
+    for dw in range(k):
+        win = band[:, dw : dw + wo * stride, :]
+        parts.append(win.reshape(bh, wo, stride, c)[:, :, 0, :])
+    x = jnp.stack(parts, axis=2)  # (bh, Wo, k, C) — (dw, c) fastest-varying
+    x2d = x.reshape(bh * wo, k * c)
+    wmix2d = wmix_ref[...].reshape(wmix_ref.shape[1], wmix_ref.shape[2])
+    _accumulate_step(x2d, wmix2d, acc_ref, dx=dx, first=ki == 0)
+    _write_outputs(shift_ref, out_ref, raw_ref, acc_ref, last=ki == k - 1,
+                   mode=mode, v_lsb=v_lsb, max_count=max_count)
+
+
+def _split_refs(refs):
+    """(out, acc) or (out, raw, acc) depending on want_raw."""
+    if len(refs) == 2:
+        out_ref, acc_ref = refs
+        return out_ref, None, acc_ref
+    out_ref, raw_ref, acc_ref = refs
+    return out_ref, raw_ref, acc_ref
+
+
+
+
+
+def default_conv_blocks(b: int, ho: int, wo: int, n: int,
+                        kc_dx: int) -> tuple[int, int]:
+    """(block_h, block_n) heuristic: bh·Wo ≈ 2048 rows per tile, full-N
+    blocks up to 128 — see DESIGN.md §3.3 for the VMEM budget math."""
+    bh = max(1, min(b * ho, max(1, 2048 // max(wo, 1))))
+    bn = min(128, ceil_to(n, 128))
+    return bh, bn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel", "stride", "coeffs", "mode", "v_lsb",
+                     "max_count", "block_h", "block_n", "want_raw",
+                     "interpret"),
+)
+def p2m_conv_pallas(
+    images,
+    w,
+    shift,
+    *,
+    kernel: int,
+    stride: int,
+    coeffs: tuple,
+    mode: str = "relu",
+    v_lsb: float = 1.0 / 255.0,
+    max_count: int = 255,
+    block_h: int | None = None,
+    block_n: int | None = None,
+    want_raw: bool = False,
+    interpret: bool = False,
+):
+    """Fused P²M conv: NHWC images in, (B, Ho, Wo, N) activations out.
+
+    images: (B, H, W, C) in [0, 1]; w: (k·k·C, N) signed flat weights with
+    (kh, kw, C) fastest-varying K order (the `extract_patches` layout);
+    shift: (N,) BN counter pre-load in volts.
+
+    ``want_raw=True`` additionally returns the pre-epilogue accumulation
+    (the training residual for the backward mask — see `backward.py`).
+
+    VMEM per step (fp32 words): x-tile ``bh·Wo·dx·kC`` (power concat) +
+    W̃-tile ``dx·kC·bn`` + acc/out ``2·bh·Wo·bn``.  At the paper geometry
+    (Wo=112, kC=75, dx=3, bh=8, bn=128) that is ≈ 1.3 MB — double-buffered
+    comfortably inside the ~16 MB v5e VMEM (DESIGN.md §3.3).
+    """
+    b, h, w_dim, c = images.shape
+    k, s = kernel, stride
+    ho = conv_out_spatial(h, k, s)
+    wo = conv_out_spatial(w_dim, k, s)
+    kc = k * c
+    kk = k * k * c
+    assert w.shape[0] == kk, (w.shape, kk)
+    n = w.shape[1]
+    dx = len(coeffs[0])
+
+    # Host-side (XLA) weight prep: O(dx·K·N), weight-sized.
+    wmix = premix_weights(w, coeffs)  # (dx, K, N)
+    # Per-kernel-row layout: (k, dx·kC, N), rows ordered (j, dw, c) to match
+    # the kernel's power-concat column order.
+    wmix = wmix.reshape(dx, k, kc, n).transpose(1, 0, 2, 3).reshape(
+        k, dx * kc, n)
+
+    bh_default, bn_default = default_conv_blocks(b, ho, wo, n, dx * kc)
+    bh = min(block_h or bh_default, b * ho)
+    bn = min(block_n or bn_default, ceil_to(n, 128))
+
+    mh = b * ho
+    mh_pad = ceil_to(mh, bh)
+    n_pad = ceil_to(n, bn)
+
+    wmix = jnp.pad(wmix, ((0, 0), (0, 0), (0, n_pad - n)))
+    sp = jnp.pad(jnp.asarray(shift, jnp.float32), (0, n_pad - n)).reshape(
+        1, n_pad)
+
+    grid = (mh_pad // bh, n_pad // bn, k)
+    out_shapes = [jax.ShapeDtypeStruct((mh_pad, wo, n_pad), jnp.float32)]
+    out_specs = [pl.BlockSpec((bh, wo, bn), lambda mi, ni, ki: (mi, 0, ni))]
+    if want_raw:
+        out_shapes.append(jax.ShapeDtypeStruct((mh_pad, wo, n_pad),
+                                               jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((bh, wo, bn), lambda mi, ni, ki: (mi, 0, ni)))
+
+    common = dict(mode=mode, v_lsb=v_lsb, max_count=max_count)
+    if s == k:
+        # Zero-copy implicit im2col: crop the valid region and view it as
+        # (B·Ho, k, Wo, k·C); the grid's k-dimension walks kernel rows.
+        a = images[:, : ho * k, : wo * k, :].reshape(mh, k, wo, kc)
+        a = jnp.pad(a, ((0, mh_pad - mh), (0, 0), (0, 0), (0, 0)))
+        kernel_fn = functools.partial(_conv_kernel_fast, k=k, dx=dx, **common)
+        x_spec = pl.BlockSpec((bh, 1, wo, kc), lambda mi, ni, ki: (mi, ki, 0, 0))
+        x_arr = a
+    else:
+        # Kernel-row band stack: (k, B·Ho, Wpad, C) — ≤ k/s × the input.
+        rows = jnp.stack(
+            [images[:, dh : dh + (ho - 1) * s + 1 : s, :, :]
+             for dh in range(k)],
+            axis=0,
+        ).reshape(k, mh, w_dim, c)
+        w_band = wo * s + k  # every dw window slice stays in-bounds
+        rows = jnp.pad(rows, ((0, 0), (0, mh_pad - mh),
+                              (0, w_band - w_dim), (0, 0)))
+        kernel_fn = functools.partial(_conv_kernel_general, k=k, stride=s,
+                                      wo=wo, dx=dx, **common)
+        x_spec = pl.BlockSpec((1, bh, w_band, c),
+                              lambda mi, ni, ki: (ki, mi, 0, 0))
+        x_arr = rows
+
+    outs = pl.pallas_call(
+        kernel_fn,
+        grid=grid,
+        in_specs=[
+            x_spec,
+            pl.BlockSpec((1, dx * kc, bn), lambda mi, ni, ki: (ki, 0, ni)),
+            pl.BlockSpec((1, bn), lambda mi, ni, ki: (0, ni)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((bh * wo, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_arr, wmix, sp)
+
+    def _unpad(o):
+        return o[:mh, :, :n].reshape(b, ho, wo, n)
+
+    if want_raw:
+        return _unpad(outs[0]), _unpad(outs[1])
+    return _unpad(outs[0])
+
+
+def im2col_slices(images, kernel: int, stride: int):
+    """Per-kernel-row im2col slices, without materializing the patch tensor.
+
+    Yields k arrays of shape (M, k·C) — each a (strided-)sliced view the
+    compiler can fuse; at ``stride == kernel`` they are pure reshapes.
+    """
+    b, h, w_dim, c = images.shape
+    k, s = kernel, stride
+    ho = conv_out_spatial(h, k, s)
+    wo = conv_out_spatial(w_dim, k, s)
+    m = b * ho * wo
+    if s == k:
+        a = images[:, : ho * k, : wo * k, :].reshape(b * ho, k, wo, k * c)
+        for dh in range(k):
+            yield a[:, dh].reshape(m, k * c)
+        return
+    # General stride: same row-band structure as the Pallas kernel — one
+    # strided row gather per dh, then contiguous slice + reshape-subsample
+    # for the k in-row windows (cheaper than k strided gathers).
+    w_band = wo * s + k
+    for dh in range(k):
+        rows = images[:, dh : dh + (ho - 1) * s + 1 : s, :, :]  # (B,Ho,W,C)
+        rows = jnp.pad(rows, ((0, 0), (0, 0), (0, w_band - w_dim), (0, 0)))
+        cols = [rows[:, :, dw : dw + wo * s, :]
+                .reshape(b, ho, wo, s, c)[:, :, :, 0, :]
+                for dw in range(k)]
+        x = jnp.stack(cols, axis=3)  # (B, Ho, Wo, k, C)
+        yield x.reshape(m, k * c)
+
+
+def im2col_matrix(images, kernel: int, stride: int):
+    """Materialized (M, k·k·C) im2col matrix, (kh, kw, C) fastest-varying.
+
+    Built from `im2col_slices`, so at ``stride == kernel`` the only data
+    movement is the final concat.  Used by the backward pass (which needs
+    X for the power factors) and as a fallback patch extractor; the fused
+    forward never calls this.
+    """
+    return jnp.concatenate(list(im2col_slices(images, kernel, stride)),
+                           axis=1)
+
+
+def p2m_conv_raw_jnp(images, w, *, kernel: int, stride: int, coeffs):
+    """Pre-epilogue fused conv accumulation in XLA (differentiable).
+
+    Same basis-premix decomposition as the Pallas kernel — one
+    ``(M, dx·kC) @ (dx·kC, N)`` contraction per kernel row, never a
+    ``(M, k²C)`` patch tensor.
+    """
+    k, c = kernel, images.shape[-1]
+    kc = k * c
+    n = w.shape[1]
+    dx = len(coeffs[0])
+    wmix = premix_weights(w, coeffs)  # (dx, K, N)
+    wmix = wmix.reshape(dx, k, kc, n).transpose(1, 0, 2, 3).reshape(
+        k, dx * kc, n)
+    raw = None
+    for dh, x in enumerate(im2col_slices(images, kernel, stride)):
+        xcat = _power_concat(x.astype(jnp.float32), dx)
+        term = xcat @ wmix[dh]
+        raw = term if raw is None else raw + term
+    return raw  # (M, N)
+
+
+def p2m_conv_jnp(images, w, shift, *, kernel: int, stride: int, coeffs,
+                 mode: str = "relu", v_lsb: float = 1.0 / 255.0,
+                 max_count: int = 255):
+    """XLA fused conv: same contract as `p2m_conv_pallas`, differentiable."""
+    b, h, w_dim, _ = images.shape
+    ho = conv_out_spatial(h, kernel, stride)
+    wo = conv_out_spatial(w_dim, kernel, stride)
+    raw = p2m_conv_raw_jnp(images, w, kernel=kernel, stride=stride,
+                           coeffs=coeffs)
+    shift = jnp.asarray(shift, jnp.float32)
+    out = _epilogue_values(raw, shift, mode=mode, v_lsb=v_lsb,
+                           max_count=max_count)
+    return out.reshape(b, ho, wo, w.shape[1])

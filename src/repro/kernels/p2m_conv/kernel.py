@@ -26,20 +26,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.p2m_conv.conv import _epilogue_values, ceil_to
+
 
 def _p2m_kernel(
     x_ref,        # (bm, bk) activation patch tile
     w_ref,        # (bk, bn) signed weight tile
     shift_ref,    # (1, bn) BN shift term (volts)
-    out_ref,      # (bm, bn)
-    acc_ref,      # VMEM scratch (bm, bn) fp32
-    *,
+    *refs,        # out (bm, bn) [, raw (bm, bn)], then acc scratch
     coeffs: Sequence[Sequence[float]],
     nk: int,
     mode: str,
     v_lsb: float,
     max_count: int,
 ):
+    if len(refs) == 3:
+        out_ref, raw_ref, acc_ref = refs
+    else:
+        (out_ref, acc_ref), raw_ref = refs, None
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -78,21 +82,11 @@ def _p2m_kernel(
     def _epilogue():
         raw = acc_ref[...]
         shift = shift_ref[...].astype(jnp.float32)  # (1, bn), broadcasts
-        if mode == "raw":
-            out = raw + shift
-        elif mode == "relu":
-            out = jnp.clip(raw + shift, 0.0, max_count * v_lsb)
-        elif mode == "quant":
-            counts = jnp.round(raw / v_lsb) + jnp.round(shift / v_lsb)
-            counts = jnp.clip(counts, 0.0, float(max_count))
-            out = counts * v_lsb
-        else:  # pragma: no cover - guarded by ops.py
-            raise ValueError(f"unknown mode {mode!r}")
+        out = _epilogue_values(raw, shift, mode=mode, v_lsb=v_lsb,
+                               max_count=max_count)
         out_ref[...] = out.astype(out_ref.dtype)
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
+        if raw_ref is not None:
+            raw_ref[...] = raw
 
 
 @functools.partial(
@@ -105,6 +99,7 @@ def _ceil_to(x: int, m: int) -> int:
         "block_m",
         "block_n",
         "block_k",
+        "want_raw",
         "interpret",
     ),
 )
@@ -120,9 +115,13 @@ def p2m_matmul_pallas(
     block_m: int = 256,
     block_n: int = 128,
     block_k: int = 128,
+    want_raw: bool = False,
     interpret: bool = False,
 ):
     """Tiled Pallas forward. x: (M, K), w: (K, N), shift: (N,) → (M, N) f32.
+
+    ``want_raw=True`` additionally returns the pre-epilogue accumulation
+    (saved as the training residual for the backward mask, `backward.py`).
 
     VMEM budget per step (fp32 equivalents): x tile bm·bk + w tile bk·bn +
     acc bm·bn + out bm·bn ≈ (256·128 + 128·128 + 2·256·128)·4 B ≈ 0.6 MB —
@@ -132,10 +131,10 @@ def p2m_matmul_pallas(
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
-    bm = min(block_m, _ceil_to(m, 8))
-    bn = min(block_n, _ceil_to(n, 128))
-    bk = min(block_k, _ceil_to(k, 128))
-    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    bm = min(block_m, ceil_to(m, 8))
+    bn = min(block_n, ceil_to(n, 128))
+    bk = min(block_k, ceil_to(k, 128))
+    mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
 
     xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
@@ -152,7 +151,12 @@ def p2m_matmul_pallas(
         v_lsb=v_lsb,
         max_count=max_count,
     )
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni))]
+    out_shapes = [jax.ShapeDtypeStruct((mp, np_), jnp.float32)]
+    if want_raw:
+        out_specs.append(pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)))
+        out_shapes.append(jax.ShapeDtypeStruct((mp, np_), jnp.float32))
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -160,9 +164,11 @@ def p2m_matmul_pallas(
             pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
             pl.BlockSpec((1, bn), lambda mi, ni, ki: (0, ni)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(xp, wp, sp)
-    return out[:m, :n]
+    if want_raw:
+        return outs[0][:m, :n], outs[1][:m, :n]
+    return outs[0][:m, :n]

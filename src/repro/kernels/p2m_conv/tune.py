@@ -1,0 +1,239 @@
+"""Block-size autotuner for the P²M kernels (DESIGN.md §5).
+
+Picks ``(block_m, block_n, block_k)`` for `p2m_matmul_pallas` and
+``(block_h, block_n)`` for `p2m_conv_pallas` by enumerating the legal
+candidates under the VMEM budget (tile working set × 2 for the pipeline's
+double buffering must fit in half of the ~16 MB core VMEM) and timing
+each once on synthetic data.
+
+Cache semantics: winners are memoized **per signature** — the problem
+shape, the coefficient table (its nonzero pattern changes the kernel's
+instruction mix), and the epilogue mode.  A signature is timed at most
+once per process; every later call is a dict lookup, so the tuner adds
+one-off JIT-warmup-style latency, never steady-state cost.  The cache can
+be exported as JSON (`cache_dump`) so benchmark runs can record winners.
+
+Autotuning is **off by default off-TPU** (timing interpret-mode kernels
+would measure the Python interpreter): `get_*_blocks` then returns the
+static heuristic defaults instantly.  Set ``REPRO_P2M_AUTOTUNE=1`` (or
+pass ``enable=True``) to force it — tests do, with toy shapes, to
+exercise the machinery.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+# Half of a v5e core's ~16 MB VMEM, leaving the other half for the
+# pipeline's double buffering (DESIGN.md §3.3).
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+_CACHE: dict[tuple, dict] = {}
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def enabled(enable: bool | None = None) -> bool:
+    if enable is not None:
+        return enable
+    if os.environ.get("REPRO_P2M_AUTOTUNE", "") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration under the VMEM budget
+# ---------------------------------------------------------------------------
+
+
+def matmul_vmem_bytes(bm: int, bn: int, bk: int, dx: int = 3) -> int:
+    """fp32 working set of one `p2m_matmul_pallas` grid step: x tile +
+    w tile + acc scratch + out tile (+ the dx-power temps live in
+    registers/VPU, bounded by the x tile)."""
+    words = bm * bk * dx + bk * bn + 2 * bm * bn
+    return 4 * words
+
+
+def conv_vmem_bytes(bh: int, wo: int, kc: int, bn: int, dx: int = 3) -> int:
+    """fp32 working set of one `p2m_conv_pallas` grid step (power concat
+    dominates the activation side)."""
+    words = bh * wo * kc * dx + dx * kc * bn + 2 * bh * wo * bn
+    return 4 * words
+
+
+def matmul_candidates(m: int, k: int, n: int, *, dx: int = 3,
+                      budget: int = VMEM_BUDGET_BYTES
+                      ) -> list[tuple[int, int, int]]:
+    """Legal (bm, bn, bk) grid-block shapes, deduped after clamping to the
+    (tile-quantum-padded) problem dims."""
+    out = []
+    seen = set()
+    for bm in (128, 256, 512, 1024):
+        for bn in (128, 256):
+            for bk in (128, 256, 512):
+                cand = (min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 128)),
+                        min(bk, _ceil_to(k, 128)))
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                if matmul_vmem_bytes(*cand, dx=dx) <= budget:
+                    out.append(cand)
+    return out
+
+
+def conv_candidates(b: int, ho: int, wo: int, n: int, kc: int, *, dx: int = 3,
+                    budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int]]:
+    """Legal (block_h, block_n) for the fused conv kernel."""
+    out = []
+    seen = set()
+    for bh in (1, 2, 4, 8, 16, 32, 64):
+        for bn in (128, 256):
+            cand = (min(bh, b * ho), min(bn, _ceil_to(n, 128)))
+            if cand in seen:
+                continue
+            seen.add(cand)
+            if conv_vmem_bytes(cand[0], wo, kc, cand[1], dx=dx) <= budget:
+                out.append(cand)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Timing + memoization
+# ---------------------------------------------------------------------------
+
+
+def _time_once(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds, blocking on outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _coeff_sig(coeffs) -> tuple:
+    return tuple(tuple(float(v) for v in row) for row in coeffs)
+
+
+def autotune(key: tuple, candidates: Iterable, run: Callable,
+             *, iters: int = 3) -> dict:
+    """Generic: time `run(candidate)` for each candidate, cache the winner.
+
+    Returns ``{"best": candidate, "timings": {candidate: seconds}}``.
+    Failures (e.g. a block shape the backend rejects) are recorded as inf
+    and skipped, so one bad candidate never kills a tuning pass.
+    """
+    if key in _CACHE:
+        return _CACHE[key]
+    timings: dict = {}
+    for cand in candidates:
+        try:
+            timings[cand] = _time_once(run, cand, iters=iters)
+        except Exception:  # noqa: BLE001 - per-candidate isolation
+            timings[cand] = float("inf")
+    if not timings or all(np.isinf(list(timings.values()))):
+        raise RuntimeError(f"autotune: no viable candidate for {key}")
+    best = min(timings, key=timings.get)
+    result = {"best": best, "timings": timings}
+    _CACHE[key] = result
+    return result
+
+
+def get_matmul_blocks(m: int, k: int, n: int, coeffs, mode: str,
+                      *, enable: bool | None = None, interpret: bool = False,
+                      iters: int = 3) -> tuple[int, int, int]:
+    """(block_m, block_n, block_k) for `p2m_matmul_pallas` — tuned when
+    enabled, heuristic defaults otherwise."""
+    default = (256, 128, 128)
+    # `interpret` is part of the key: winners timed in interpret mode must
+    # never be served to compiled calls with the same shape signature.
+    key = ("matmul", m, k, n, _coeff_sig(coeffs), mode, bool(interpret))
+    if key in _CACHE:
+        return _CACHE[key]["best"]
+    if not enabled(enable):
+        return default
+    from repro.kernels.p2m_conv.kernel import p2m_matmul_pallas
+
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(rng.random((m, k)), jax.numpy.float32)
+    w = jax.numpy.asarray(rng.uniform(-1, 1, (k, n)), jax.numpy.float32)
+    s = jax.numpy.zeros((n,), jax.numpy.float32)
+
+    def run(cand):
+        bm, bn, bk = cand
+        return p2m_matmul_pallas(x, w, s, coeffs=_coeff_sig(coeffs),
+                                 mode=mode, block_m=bm, block_n=bn,
+                                 block_k=bk, interpret=interpret)
+
+    dx = len(coeffs[0])
+    cands = matmul_candidates(m, k, n, dx=dx) or [default]
+    return autotune(key, cands, run, iters=iters)["best"]
+
+
+def get_conv_blocks(b: int, h: int, w: int, c: int, n: int, kernel: int,
+                    stride: int, coeffs, mode: str, *,
+                    enable: bool | None = None, interpret: bool = False,
+                    iters: int = 3) -> tuple[int | None, int | None]:
+    """(block_h, block_n) for `p2m_conv_pallas` — tuned when enabled,
+    (None, None) otherwise (the kernel's own heuristic)."""
+    key = ("conv", b, h, w, c, n, kernel, stride, _coeff_sig(coeffs), mode,
+           bool(interpret))
+    if key in _CACHE:
+        return _CACHE[key]["best"]
+    if not enabled(enable):
+        return (None, None)
+    from repro.kernels.p2m_conv.conv import conv_out_spatial, p2m_conv_pallas
+
+    ho = conv_out_spatial(h, kernel, stride)
+    wo = conv_out_spatial(w, kernel, stride)
+    rng = np.random.default_rng(0)
+    imgs = jax.numpy.asarray(rng.random((b, h, w, c)), jax.numpy.float32)
+    wts = jax.numpy.asarray(
+        rng.uniform(-1, 1, (kernel * kernel * c, n)), jax.numpy.float32)
+    s = jax.numpy.zeros((n,), jax.numpy.float32)
+
+    def run(cand):
+        bh, bn = cand
+        return p2m_conv_pallas(imgs, wts, s, kernel=kernel, stride=stride,
+                               coeffs=_coeff_sig(coeffs), mode=mode,
+                               block_h=bh, block_n=bn, interpret=interpret)
+
+    dx = len(coeffs[0])
+    cands = conv_candidates(b, ho, wo, n, kernel * c, dx=dx) or [(8, 128)]
+    return autotune(key, cands, run, iters=iters)["best"]
+
+
+# ---------------------------------------------------------------------------
+# Cache management
+# ---------------------------------------------------------------------------
+
+
+def cache_info() -> dict[str, tuple]:
+    """{printable-signature: best-blocks} for every tuned entry."""
+    return {repr(k): v["best"] for k, v in _CACHE.items()}
+
+
+def cache_clear() -> None:
+    _CACHE.clear()
+
+
+def cache_dump(path: str) -> None:
+    """Persist winners (not timings) as JSON, e.g. from a benchmark run."""
+    payload = [
+        {"key": list(map(repr, k)), "best": list(v["best"]),
+         "timings_s": {repr(c): t for c, t in v["timings"].items()}}
+        for k, v in _CACHE.items()
+    ]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)

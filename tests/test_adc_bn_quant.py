@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.adc import ADCConfig, adc_counts, adc_dequant, shifted_relu, ste_adc
 from repro.core.bn_fold import bn_affine, deploy_params, fold_error

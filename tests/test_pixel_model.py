@@ -1,7 +1,7 @@
 """Pixel model: fit quality, structural constraints, Fig. 3 behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pixel_model import (
     W_RANGE,
