@@ -43,6 +43,10 @@ from repro.kernels.p2m_conv.ops import _coeff_tuple
 
 ADC = ADCConfig()
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_p2m_conv.json"
+# Smoke-run rows land in a transient JSON so `scripts/bench_gate.py` can
+# gate CI against the committed full-geometry baseline above.
+BENCH_SMOKE_JSON = (Path(__file__).resolve().parent / "results"
+                    / "BENCH_p2m_conv.smoke.json")
 
 # (M, K, N): paper geometry per image = 112·112 patches × 75 × 8
 CASES = [
@@ -198,5 +202,4 @@ def run(smoke: bool = False) -> None:
     _run_matmul_cases(model, smoke=smoke)
     _run_conv_cases(model, smoke=smoke)
     _run_bwd_cases(model, smoke=smoke)
-    if not smoke:
-        write_json(BENCH_JSON, prefix="p2m_")
+    write_json(BENCH_SMOKE_JSON if smoke else BENCH_JSON, prefix="p2m_")

@@ -1,7 +1,10 @@
 """Wall-clock benchmarks (CPU, reduced configs): P²M-MobileNetV2 train
 step (the paper's workload — the §Perf measured-iteration target),
-smoke-LM train step, and decode throughput."""
+batched vision serving throughput, smoke-LM train step, and decode
+throughput."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -9,10 +12,12 @@ import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.configs import get_smoke_config
+from repro.configs.p2m_vww import SERVE_MAX_BATCH
 from repro.data import SyntheticVWW
 from repro.models.families import get_family
 from repro.models.mobilenetv2 import MNV2Config, init_mnv2
 from repro.optim import constant, sgd
+from repro.serving import VisionEngine, VisionRequest
 from repro.train import TrainState, make_train_step
 from repro.train.vision import make_vww_train_step
 
@@ -30,6 +35,22 @@ def run() -> None:
         batch = SyntheticVWW(image_size=80, batch=16).batch_at(0)
         t = timeit(lambda s, b: step(s, b)[0], state, batch)
         emit(f"vww_train_step_{variant}_80px", t, "batch=16 CPU")
+
+    # ---- batched vision serving (deploy-folded P²M stem) ----
+    cfg = MNV2Config(variant="p2m", image_size=80, width=0.25,
+                     head_channels=64)
+    params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
+    imgs = SyntheticVWW(image_size=80, batch=32).batch_at(0)["images"]
+    engine = VisionEngine(params, bn, cfg, max_batch=SERVE_MAX_BATCH)
+    engine.submit(VisionRequest(uid=-1, image=imgs[0]))
+    engine.run()  # warmup: compile the microbatch forward
+    t0 = time.perf_counter()
+    for uid in range(32):
+        engine.submit(VisionRequest(uid=uid, image=imgs[uid]))
+    engine.run()
+    dt = time.perf_counter() - t0
+    emit("vision_serve_p2m_80px", dt / 32 * 1e6,
+         f"microbatch={SERVE_MAX_BATCH}; {32 / dt:.0f} img/s CPU")
 
     # ---- LM train steps (smoke configs) ----
     for arch in ("llama3.2-1b", "qwen3-moe-30b-a3b", "rwkv6-3b",

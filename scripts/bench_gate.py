@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Bench-smoke regression gate (scripts/ci.sh).
+
+Compares the smoke-run rows (`benchmarks/results/BENCH_p2m_conv.smoke.json`,
+written by `benchmarks/run.py --smoke`) against the committed
+full-geometry baseline `BENCH_p2m_conv.json`.
+
+Absolute wall-clock is machine-dependent, so the gate holds the
+*relative* metrics the kernel work is about — fused-vs-patches and
+closed-form-bwd-vs-jax.vjp speedups — to a generous fraction of the
+committed baseline's value for the corresponding full-geometry case.  A
+real regression (fused path silently falling back to patch
+materialization, the custom VJP re-differentiating the forward) craters
+these ratios by far more than CI timing noise moves them.
+
+Skip with REPRO_BENCH_GATE=0 (e.g. on a loaded laptop).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+BASELINE = ROOT / "BENCH_p2m_conv.json"
+SMOKE = ROOT / "benchmarks" / "results" / "BENCH_p2m_conv.smoke.json"
+
+# smoke row -> (baseline row, metric, fraction): the smoke speedup must
+# reach `fraction` of the committed baseline speedup for the matching
+# full-geometry case (same code paths, reduced shapes).  Fractions are
+# wide on purpose — observed smoke values sit 2.5×–16× above these
+# floors across runs, while the regressions this guards against (silent
+# fallback to the patch path / re-differentiated backward) crater the
+# metric well below them.  The bwd gate is widest: the jax.vjp
+# comparator's wall-clock swings heavily with CI load.
+GATES = {
+    "p2m_conv_fused_smoke_b1":
+        ("p2m_conv_fused_paper_b1", "speedup_vs_patches", 0.4),
+    "p2m_conv_fused_smoke_overlap":
+        ("p2m_conv_fused_overlap_s2_b1", "speedup_vs_patches", 0.3),
+    "p2m_bwd_closed_smoke":
+        ("p2m_bwd_closed_paper_1img", "speedup_vs_jaxvjp", 0.15),
+}
+
+
+def _rows(path: Path) -> dict[str, dict]:
+    payload = json.loads(path.read_text())
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def main() -> int:
+    if os.environ.get("REPRO_BENCH_GATE", "1") == "0":
+        print("bench_gate: skipped (REPRO_BENCH_GATE=0)")
+        return 0
+    if not SMOKE.exists():
+        print(f"bench_gate: FAIL — no smoke results at {SMOKE} "
+              "(run `python benchmarks/run.py --smoke` first)")
+        return 1
+    smoke = _rows(SMOKE)
+    base = _rows(BASELINE)
+
+    failures: list[str] = []
+    for name, row in smoke.items():
+        t = row["us_per_call"]
+        if not (math.isfinite(t) and t > 0):
+            failures.append(f"{name}: non-finite timing {t!r}")
+
+    for smoke_name, (base_name, metric, fraction) in GATES.items():
+        if smoke_name not in smoke:
+            failures.append(f"missing smoke row {smoke_name}")
+            continue
+        if base_name not in base or metric not in base[base_name]:
+            failures.append(f"baseline {base_name}.{metric} missing "
+                            "(regenerate BENCH_p2m_conv.json)")
+            continue
+        got = smoke[smoke_name].get(metric)
+        floor = fraction * base[base_name][metric]
+        if got is None:
+            failures.append(f"{smoke_name}: metric {metric} missing")
+        elif got < floor:
+            failures.append(
+                f"{smoke_name}: {metric}={got:.2f} below gate {floor:.2f} "
+                f"(= {fraction} x baseline {base[base_name][metric]:.2f} "
+                f"from {base_name})")
+        else:
+            print(f"bench_gate: {smoke_name} {metric}={got:.2f} "
+                  f">= {floor:.2f}  OK")
+
+    if failures:
+        print("bench_gate: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"bench_gate: OK ({len(smoke)} smoke rows checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,3 +14,11 @@ SMOKE = MNV2Config(variant="p2m", image_size=80, width=0.25, head_channels=64,
                    p2m=P2M_LAYER)
 SMOKE_BASELINE = MNV2Config(variant="baseline", image_size=80, width=0.25,
                             head_channels=64)
+
+# Batched vision serving defaults (serving/vision.py, DESIGN.md §7.2).
+# Microbatch 8 fills the N=8 output-channel lane of the fused conv at the
+# paper geometry; queue depth 64 rides out ~8 launches of burst before
+# the oldest-frame eviction policy kicks in.
+SERVE_MAX_BATCH = 8
+SERVE_MAX_QUEUE = 64
+SERVE_QUANT_BITS = 8  # PTQ width for the deploy-folded stem (Table 1 N_b)

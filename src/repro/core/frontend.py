@@ -25,6 +25,7 @@ from repro.core.p2m_conv import (
     init_p2m_state,
 )
 from repro.core.pixel_model import PixelModel, default_pixel_model
+from repro.parallel import shard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +83,9 @@ def apply_p2m_frontend(
     implementation (fused implicit-im2col kernel by default — see
     `core.p2m_conv._resolve_impl`)."""
     model = model or default_pixel_model()
+    # Data-parallel by frame, like the rest of the vision stack
+    # (DESIGN.md §7.1); a no-op outside a sharding plan.
+    images = shard(images, "batch", None, None, None)
     if deploy is not None:
         fmap = apply_p2m_conv_deploy(deploy, images, cfg.conv, model,
                                      impl=impl)
@@ -97,4 +101,6 @@ def apply_p2m_frontend(
     x = fmap[:, : (h // p) * p, : (w // p) * p, :]
     x = x.reshape(b, h // p, p, w // p, p, c).transpose(0, 1, 3, 2, 4, 5)
     x = x.reshape(b, (h // p) * (w // p), p * p * c)
-    return x @ params["proj"], new_state
+    # Token embeddings leave with the LM activation layout so the
+    # backbone's plan (batch × seq × embed_act rules) applies seamlessly.
+    return shard(x @ params["proj"], "batch", "seq", "embed_act"), new_state

@@ -190,11 +190,21 @@ def cached_attention(p: dict, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
 
 def init_embedding(kg: KeyGen, cfg: ModelConfig) -> dict:
     """Embedding table + output head, padded to ``padded_vocab`` so the
-    vocab dim shards cleanly under TP (pad logits are masked in lm_head)."""
+    vocab dim shards cleanly under TP (pad logits are masked in lm_head).
+
+    Table init is ``d^-1/4``, not the head-side fan-in ``d^-1/2``: the
+    residual branches (attn/mlp ``wo``) emit unit-variance activations at
+    init, so a ``d^-1/2`` table buries the token identity at ~1/d of the
+    stream variance and early training is signal-starved (the seed-red
+    trainer tests measured exactly this — loss barely moved in the first
+    tens of steps).  ``d^-1/4`` is the geometric mean of the input-side
+    optimum (O(1), competes with the branches) and the head-side optimum
+    (O(d^-1/2), unit-variance logits) — the standard compromise for tied
+    embeddings without a separate input multiplier."""
     dt = cfg.dtype
     tree: dict[str, Any] = {
         "table": make(kg(), (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
-                      scale=cfg.d_model**-0.5, dtype=dt),
+                      scale=cfg.d_model**-0.25, dtype=dt),
         "final_norm": init_norm(cfg, (), ()),
     }
     if not cfg.tie_embeddings:

@@ -236,7 +236,9 @@ def apply_mnv2(
     x = _relu6(x)
     x = x.mean(axis=(1, 2))
     logits = x @ params["fc"]["w"] + params["fc"]["b"]
-    new_state["fc"] = state.get("fc", {})
+    # (no "fc" entry in the state tree: the head is stateless, and the
+    # output state must mirror the input structure exactly so one
+    # sharding tree serves jit in_shardings and out_shardings alike)
     return logits, new_state
 
 

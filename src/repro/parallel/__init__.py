@@ -20,7 +20,9 @@ from repro.parallel.axes import (
 )
 from repro.parallel.plans import (
     BASE_RULES,
+    VISION_RULES,
     plan_for,
+    vision_plan_for,
 )
 
 __all__ = [
@@ -32,5 +34,7 @@ __all__ = [
     "use_plan",
     "sanitize_spec",
     "BASE_RULES",
+    "VISION_RULES",
     "plan_for",
+    "vision_plan_for",
 ]

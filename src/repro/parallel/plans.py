@@ -42,6 +42,27 @@ BASE_RULES: dict[str, Any] = {
 }
 
 
+# Vision rules (VWW MobileNetV2 ± P²M stem, DESIGN.md §7): pure data
+# parallelism.  The conv stacks are tiny (≤ a few MB at width 1.0) so
+# params/optimizer/BN state replicate whole; only the image batch dim is
+# split.  "model"-axis rules are deliberately absent — a vision plan on a
+# (data, model) mesh simply leaves the model axis unused, so the same
+# plan serves a dedicated vision mesh and a slice of an LM mesh.
+VISION_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "conv": None,
+}
+
+
+def vision_plan_for(mesh: Mesh, *,
+                    overrides: dict[str, Any] | None = None) -> ShardingPlan:
+    """Data-parallel plan for the VWW/vision stack (see VISION_RULES)."""
+    rules = dict(VISION_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingPlan(mesh=mesh, rules=rules)
+
+
 def plan_for(
     mesh: Mesh,
     *,

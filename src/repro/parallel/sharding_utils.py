@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -30,3 +31,26 @@ def shardings_for(values: Any, axes: Any, plan: ShardingPlan) -> Any:
 
 def replicated(plan: ShardingPlan) -> NamedSharding:
     return NamedSharding(plan.mesh, P())
+
+
+def replicated_tree(values: Any, plan: ShardingPlan) -> Any:
+    """Every leaf replicated — the param/optimizer sharding for plain-DP
+    models (e.g. the VWW MobileNetV2, whose param tree carries no logical
+    axes: conv stacks are small enough to live whole on every chip)."""
+    rep = replicated(plan)
+    return jax.tree.map(lambda _: rep, values)
+
+
+def batch_shardings(batch: Any, plan: ShardingPlan) -> Any:
+    """Dim-0 of every leaf sharded per the ``"batch"`` logical rule,
+    remaining dims replicated — the input sharding for data-parallel
+    steps over (B, ...) arrays (images, labels, token grids).  Scalar
+    leaves (step counters, mixup lambdas) replicate."""
+    def leaf(x):
+        ndim = np.ndim(x)
+        if ndim == 0:
+            return replicated(plan)
+        axes = ("batch",) + (None,) * (ndim - 1)
+        return NamedSharding(plan.mesh, logical_spec(np.shape(x), axes, plan))
+
+    return jax.tree.map(leaf, batch)

@@ -1,3 +1,5 @@
 from repro.serving.engine import Request, ServeEngine, greedy_generate
+from repro.serving.vision import VisionEngine, VisionRequest
 
-__all__ = ["Request", "ServeEngine", "greedy_generate"]
+__all__ = ["Request", "ServeEngine", "greedy_generate",
+           "VisionEngine", "VisionRequest"]

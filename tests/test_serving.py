@@ -55,6 +55,50 @@ def test_more_requests_than_slots():
     assert all(len(r.output) == 3 for r in done)
 
 
+def test_reset_slot_zeroes_only_that_slot():
+    """_reset_slot must clear the freed slot's decode state (KV cache /
+    recurrent state, batch axis 1 in every state tree) and leave the
+    other slots' state untouched."""
+    cfg, family, params = _setup("rwkv6-3b")
+    engine = ServeEngine(params, cfg, max_batch=3, max_len=16)
+    engine.state = jax.tree.map(lambda a: jnp.ones_like(a), engine.state)
+    engine._reset_slot(1)
+    for leaf in jax.tree.leaves(engine.state):
+        arr = np.asarray(leaf)
+        assert np.all(arr[:, 1] == 0), "freed slot not cleared"
+        assert np.all(arr[:, 0] == 1), "neighbor slot was clobbered"
+        assert np.all(arr[:, 2] == 1), "neighbor slot was clobbered"
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "llama3.2-1b"])
+def test_recycled_slot_sees_no_stale_state(arch):
+    """A slot freed by one request and re-admitted by another must behave
+    as if freshly initialized — even if the previous occupant left
+    non-zero KV/recurrent state behind.  Poison the engine state after
+    the first request completes; admission must reset the slot, so the
+    second request's output equals a fresh single-request decode.
+    (Recurrent archs are the sharp case: stale state feeds *every*
+    subsequent step, with no kv_pos masking to hide behind.)"""
+    cfg, family, params = _setup(arch)
+    rng = np.random.default_rng(1)
+    p1 = rng.integers(0, cfg.vocab, 5).tolist()
+    p2 = rng.integers(0, cfg.vocab, 4).tolist()
+
+    engine = ServeEngine(params, cfg, max_batch=1, max_len=32)
+    engine.submit(Request(uid=0, prompt=p1, max_new_tokens=4))
+    engine.run()
+    assert len(engine.completed) == 1
+
+    # worst-case stale state: saturate every slot's decode state
+    engine.state = jax.tree.map(lambda a: jnp.full_like(a, 7.0), engine.state)
+
+    engine.submit(Request(uid=1, prompt=p2, max_new_tokens=4))
+    done = engine.run()
+    req2 = [r for r in done if r.uid == 1][0]
+    assert req2.output == _reference_decode(params, cfg, p2, 4), \
+        "recycled slot leaked previous occupant's state"
+
+
 def test_greedy_generate_shape():
     cfg, family, params = _setup()
     prompts = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)

@@ -109,3 +109,79 @@ def test_plan_for_cell_decode_uses_cache_sharding():
     plan_train = plan_for_cell(cfg, SHAPES["train_4k"], mesh)
     assert plan_train.rules["cache_seq"] is None
     assert plan_train.rules["embed"] == "data"  # 32B model → FSDP
+
+
+# ------------------------------------------------------------- vision DP
+
+
+def test_vision_plan_is_pure_data_parallel():
+    from repro.parallel import vision_plan_for
+
+    plan = vision_plan_for(_mesh())
+    spec = logical_spec((32, 40, 40, 3), ("batch", None, None, None), plan)
+    assert spec == P("data", None, None, None)
+    used = set()
+    for v in plan.rules.values():
+        if v is not None:
+            used.update((v,) if isinstance(v, str) else v)
+    assert "model" not in used  # the model axis stays free for LM co-tenants
+
+
+def test_replicated_tree_and_batch_shardings():
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel import vision_plan_for
+    from repro.parallel.sharding_utils import batch_shardings, replicated_tree
+
+    mesh = make_debug_mesh()
+    plan = vision_plan_for(mesh)
+    state = {"params": {"w": jnp.ones((4, 3))}, "step": jnp.zeros((), jnp.int32)}
+    rep = replicated_tree(state, plan)
+    assert all(s.spec == P() for s in jax.tree.leaves(rep))
+
+    batch = {"images": jnp.ones((8, 6, 6, 3)), "labels": jnp.ones((8,), jnp.int32),
+             "mixup_lam": jnp.float32(0.2)}
+    bs = batch_shardings(batch, plan)
+    assert bs["images"].spec == P("data", None, None, None)
+    assert bs["labels"].spec == P("data")
+    assert bs["mixup_lam"].spec == P()  # scalar leaves replicate
+    placed = jax.device_put(batch, bs)
+    np.testing.assert_array_equal(np.asarray(placed["images"]),
+                                  np.asarray(batch["images"]))
+
+
+# ----------------------------- multi-device lane (scripts/ci.sh runs this
+# file again under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (CI multi-device lane)")
+
+
+@needs8
+def test_batch_shardings_distribute_eight_ways():
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel import vision_plan_for
+    from repro.parallel.sharding_utils import batch_shardings
+
+    mesh = make_debug_mesh(8)
+    plan = vision_plan_for(mesh)
+    batch = {"x": jnp.arange(32.0).reshape(32, 1)}
+    placed = jax.device_put(batch, batch_shardings(batch, plan))
+    assert len(placed["x"].sharding.device_set) == 8
+    with use_plan(plan), mesh:
+        m = jax.jit(lambda b: shard(b["x"], "batch", None).mean())(placed)
+    assert float(m) == 15.5  # global (cross-device) reduction
+
+
+@needs8
+def test_shard_constraint_partitions_jitted_compute():
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel import vision_plan_for
+
+    mesh = make_debug_mesh(8)
+    plan = vision_plan_for(mesh)
+    x = jnp.arange(64.0).reshape(16, 4)
+    with use_plan(plan), mesh:
+        y = jax.jit(lambda v: shard(v, "batch", None) * 2.0)(x)
+    assert len(y.sharding.device_set) == 8
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * 2.0)
