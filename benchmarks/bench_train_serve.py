@@ -1,6 +1,7 @@
 """Wall-clock benchmarks (CPU, reduced configs): P²M-MobileNetV2 train
 step (the paper's workload — the §Perf measured-iteration target),
-batched vision serving throughput, smoke-LM train step, and decode
+batched vision serving throughput (single-device and data-mesh-sharded,
+gated by scripts/bench_gate.py), smoke-LM train step, and decode
 throughput."""
 from __future__ import annotations
 
@@ -14,12 +15,73 @@ from benchmarks.common import emit, timeit
 from repro.configs import get_smoke_config
 from repro.configs.p2m_vww import SERVE_MAX_BATCH
 from repro.data import SyntheticVWW
+from repro.launch.mesh import make_debug_mesh
 from repro.models.families import get_family
 from repro.models.mobilenetv2 import MNV2Config, init_mnv2
 from repro.optim import constant, sgd
 from repro.serving import VisionEngine, VisionRequest
 from repro.train import TrainState, make_train_step
 from repro.train.vision import make_vww_train_step
+
+
+def _vision_serve_case(engine: VisionEngine, imgs, n_req: int):
+    """Drive one engine through a warmed-up burst; returns
+    (µs per tick, ticks/sec, latency summary)."""
+    engine.submit(VisionRequest(uid=-1, image=imgs[0]))
+    engine.run()  # warmup: compile the microbatch forward
+    # Drop the warmup launch from the ledger — its wall-clock is compile
+    # time and would dominate the emitted mean_launch_us.
+    engine.completed.clear()
+    for k, v in engine.stats.items():
+        engine.stats[k] = type(v)()
+    tick0 = engine.tick
+    t0 = time.perf_counter()
+    for uid in range(n_req):
+        engine.submit(VisionRequest(uid=uid, image=imgs[uid % len(imgs)]))
+    engine.run()
+    dt = time.perf_counter() - t0
+    ticks = max(engine.tick - tick0, 1)
+    return dt / ticks * 1e6, ticks / dt, engine.latency_summary()
+
+
+def run_vision_serve(smoke: bool = False) -> None:
+    """Batched vision serving (deploy-folded P²M stem): single-device vs
+    data-mesh-sharded microbatch (DESIGN.md §8).  Rows carry the p2m_
+    prefix so the smoke run lands them in BENCH_p2m_conv.smoke.json for
+    `scripts/bench_gate.py`, which holds the sharded-vs-single ratio —
+    the guard against the sharded path silently degrading (per-tick
+    resharding, host sync per slot, a broken plan).  On a 1-device mesh
+    the ratio sits near 1.0; the gate floor is generous because CI
+    wall-clock swings hard."""
+    size = 40 if smoke else 80
+    n_req = 16 if smoke else 32
+    suffix = "smoke" if smoke else f"{size}px"
+    cfg = MNV2Config(variant="p2m", image_size=size, width=0.25,
+                     head_channels=64)
+    params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
+    imgs = SyntheticVWW(image_size=size, batch=n_req).batch_at(0)["images"]
+
+    single = VisionEngine(params, bn, cfg, max_batch=SERVE_MAX_BATCH)
+    us_single, tps_single, s1 = _vision_serve_case(single, imgs, n_req)
+    emit(f"p2m_vision_serve_single_{suffix}", us_single,
+         f"microbatch={SERVE_MAX_BATCH}; {tps_single:.0f} ticks/s; "
+         f"mean_launch={s1['mean_launch_us'] / 1e3:.1f}ms",
+         ticks_per_sec=tps_single,
+         mean_queue_ticks=s1["mean_queue_ticks"],
+         mean_launch_us=s1["mean_launch_us"])
+
+    mesh = make_debug_mesh()
+    sharded = VisionEngine(params, bn, cfg, max_batch=SERVE_MAX_BATCH,
+                           mesh=mesh)
+    us_sh, tps_sh, s2 = _vision_serve_case(sharded, imgs, n_req)
+    n_dev = int(mesh.devices.size)
+    emit(f"p2m_vision_serve_sharded_{suffix}", us_sh,
+         f"{n_dev}-device data mesh; {tps_sh:.0f} ticks/s; "
+         f"{us_single / us_sh:.2f}x vs single-device",
+         ticks_per_sec=tps_sh, devices=n_dev,
+         speedup_vs_single=us_single / us_sh,
+         mean_queue_ticks=s2["mean_queue_ticks"],
+         mean_launch_us=s2["mean_launch_us"])
 
 
 def run() -> None:
@@ -36,21 +98,8 @@ def run() -> None:
         t = timeit(lambda s, b: step(s, b)[0], state, batch)
         emit(f"vww_train_step_{variant}_80px", t, "batch=16 CPU")
 
-    # ---- batched vision serving (deploy-folded P²M stem) ----
-    cfg = MNV2Config(variant="p2m", image_size=80, width=0.25,
-                     head_channels=64)
-    params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
-    imgs = SyntheticVWW(image_size=80, batch=32).batch_at(0)["images"]
-    engine = VisionEngine(params, bn, cfg, max_batch=SERVE_MAX_BATCH)
-    engine.submit(VisionRequest(uid=-1, image=imgs[0]))
-    engine.run()  # warmup: compile the microbatch forward
-    t0 = time.perf_counter()
-    for uid in range(32):
-        engine.submit(VisionRequest(uid=uid, image=imgs[uid]))
-    engine.run()
-    dt = time.perf_counter() - t0
-    emit("vision_serve_p2m_80px", dt / 32 * 1e6,
-         f"microbatch={SERVE_MAX_BATCH}; {32 / dt:.0f} img/s CPU")
+    # ---- batched vision serving (single-device + sharded microbatch) ----
+    run_vision_serve(smoke=False)
 
     # ---- LM train steps (smoke configs) ----
     for arch in ("llama3.2-1b", "qwen3-moe-30b-a3b", "rwkv6-3b",

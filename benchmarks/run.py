@@ -28,6 +28,10 @@ def main() -> None:
     )
 
     if smoke:
+        # Serving rows first: bench_p2m_kernel.run writes the smoke JSON
+        # (prefix p2m_) that scripts/bench_gate.py reads, and the sharded
+        # vision-serving gate rides in it.
+        bench_train_serve.run_vision_serve(smoke=True)
         bench_p2m_kernel.run(smoke=True)
         return
     bench_paper_tables.run()

@@ -1,10 +1,17 @@
-"""Batched vision serving demo on the P²M-MobileNetV2 (CPU).
+"""Batched vision serving demo on the P²M-MobileNetV2 (CPU), driven
+through the multi-engine front door with an LM co-tenant.
 
 Replays a bursty variable-arrival trace of synthetic VWW frames through
-the VisionEngine: requests microbatch through the deploy-folded (BN
+the VisionEngine — requests microbatch through the deploy-folded (BN
 folded + 8-bit PTQ) P²M stem and backbone, free slots are zero-padded,
 and per-request latency splits into queueing delay vs launch wall-clock
-(DESIGN.md §7.2).
+(DESIGN.md §7.2/§8) — while a handful of LM requests ride the same
+FrontDoor, demonstrating mixed-modality routing and merged completion.
+
+With --mesh, the vision microbatch is sharded over the data mesh built
+from all visible devices (run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to see 8-way DP on
+CPU).
 
 Run:  PYTHONPATH=src python examples/serve_vww_p2m.py --requests 24
 """
@@ -15,20 +22,28 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_smoke_config
 from repro.configs.p2m_vww import SERVE_MAX_BATCH, SERVE_MAX_QUEUE
 from repro.data import SyntheticVWW
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.serve import FrontDoor
+from repro.models.families import get_family
 from repro.models.mobilenetv2 import MNV2Config, init_mnv2
-from repro.serving import VisionEngine, VisionRequest
+from repro.serving import Request, ServeEngine, VisionEngine, VisionRequest
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--lm-requests", type=int, default=4)
     ap.add_argument("--image-size", type=int, default=80)
     ap.add_argument("--max-batch", type=int, default=SERVE_MAX_BATCH)
     ap.add_argument("--max-queue", type=int, default=SERVE_MAX_QUEUE)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the vision microbatch over all devices")
     args = ap.parse_args()
 
     cfg = MNV2Config(variant="p2m", image_size=args.image_size, width=0.25,
@@ -36,6 +51,10 @@ def main():
     params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
     batch = SyntheticVWW(image_size=args.image_size,
                          batch=args.requests).batch_at(0)
+
+    mesh = make_debug_mesh() if args.mesh else None
+    engine = VisionEngine(params, bn, cfg, max_batch=args.max_batch,
+                          max_queue=args.max_queue, mesh=mesh)
 
     # bursty arrivals: clumps of frames every few ticks
     rng = np.random.default_rng(0)
@@ -46,13 +65,27 @@ def main():
         reqs.append(VisionRequest(uid=uid, image=batch["images"][uid],
                                   arrival_tick=tick))
 
-    engine = VisionEngine(params, bn, cfg, max_batch=args.max_batch,
-                          max_queue=args.max_queue)
-    done = engine.run(reqs)
+    # LM co-tenant: a few short prompts share the front door
+    lm_cfg = get_smoke_config("llama3.2-1b").replace(dtype=jnp.float32)
+    lm_fam = get_family(lm_cfg)
+    lm_params, _ = lm_fam.init(jax.random.PRNGKey(1), lm_cfg)
+    lm = ServeEngine(lm_params, lm_cfg, max_batch=2, max_len=64,
+                     prefill_chunk=4)
+    for uid in range(args.lm_requests):
+        prompt = rng.integers(0, lm_cfg.vocab, 6).tolist()
+        reqs.append(Request(uid=1000 + uid, prompt=prompt, max_new_tokens=8,
+                            arrival_tick=2 * uid))
+
+    door = FrontDoor(vision=engine, lm=lm)
+    merged = door.run(reqs)
+    done = [r for n, r in merged if n == "vision"]
+    lm_done = [r for n, r in merged if n == "lm"]
 
     correct = sum(r.label == int(batch["labels"][r.uid]) for r in done)
-    print(f"served {len(done)}/{args.requests} "
-          f"(accuracy vs labels {correct / len(done):.2f} — untrained net)")
+    dev = f"{len(mesh.devices.flat)}-device mesh" if mesh else "single device"
+    print(f"served {len(done)}/{args.requests} frames on {dev} "
+          f"(accuracy vs labels {correct / len(done):.2f} — untrained net) "
+          f"+ {len(lm_done)} LM requests")
     for r in done[: args.max_batch + 2]:
         print(f"  uid={r.uid:3d} arrived@{r.arrival_tick:<3d} "
               f"served@{r.served_tick:<3d} queue={r.queue_ticks} ticks  "

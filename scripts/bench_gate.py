@@ -27,14 +27,16 @@ ROOT = Path(__file__).resolve().parents[1]
 BASELINE = ROOT / "BENCH_p2m_conv.json"
 SMOKE = ROOT / "benchmarks" / "results" / "BENCH_p2m_conv.smoke.json"
 
-# smoke row -> (baseline row, metric, fraction): the smoke speedup must
-# reach `fraction` of the committed baseline speedup for the matching
-# full-geometry case (same code paths, reduced shapes).  Fractions are
-# wide on purpose — observed smoke values sit 2.5×–16× above these
-# floors across runs, while the regressions this guards against (silent
-# fallback to the patch path / re-differentiated backward) crater the
-# metric well below them.  The bwd gate is widest: the jax.vjp
-# comparator's wall-clock swings heavily with CI load.
+# smoke row -> (baseline row, metric, floor): the smoke metric must
+# reach `floor × baseline[baseline row][metric]` — or, when the baseline
+# row is None, the absolute value `floor` (for machine-independent
+# ratios with no committed-baseline counterpart).  Floors are wide on
+# purpose — observed smoke values sit 2.5×–16× above them across runs,
+# while the regressions they guard against (silent fallback to the
+# patch path / re-differentiated backward / a sharded serving path that
+# reshards or host-syncs per tick) crater the metric well below them.
+# The bwd gate is widest: the jax.vjp comparator's wall-clock swings
+# heavily with CI load.
 GATES = {
     "p2m_conv_fused_smoke_b1":
         ("p2m_conv_fused_paper_b1", "speedup_vs_patches", 0.4),
@@ -42,6 +44,11 @@ GATES = {
         ("p2m_conv_fused_overlap_s2_b1", "speedup_vs_patches", 0.3),
     "p2m_bwd_closed_smoke":
         ("p2m_bwd_closed_paper_1img", "speedup_vs_jaxvjp", 0.15),
+    # Sharded vision serving (benchmarks/bench_train_serve.py): per-tick
+    # wall of the data-mesh-sharded engine vs single-device.  ~1.0 on a
+    # 1-device mesh; absolute floor, held very low for CI noise.
+    "p2m_vision_serve_sharded_smoke":
+        (None, "speedup_vs_single", 0.2),
 }
 
 
@@ -71,19 +78,23 @@ def main() -> int:
         if smoke_name not in smoke:
             failures.append(f"missing smoke row {smoke_name}")
             continue
-        if base_name not in base or metric not in base[base_name]:
+        if base_name is None:
+            floor, source = fraction, "absolute floor"
+        elif base_name not in base or metric not in base[base_name]:
             failures.append(f"baseline {base_name}.{metric} missing "
                             "(regenerate BENCH_p2m_conv.json)")
             continue
+        else:
+            floor = fraction * base[base_name][metric]
+            source = (f"= {fraction} x baseline "
+                      f"{base[base_name][metric]:.2f} from {base_name}")
         got = smoke[smoke_name].get(metric)
-        floor = fraction * base[base_name][metric]
         if got is None:
             failures.append(f"{smoke_name}: metric {metric} missing")
         elif got < floor:
             failures.append(
                 f"{smoke_name}: {metric}={got:.2f} below gate {floor:.2f} "
-                f"(= {fraction} x baseline {base[base_name][metric]:.2f} "
-                f"from {base_name})")
+                f"({source})")
         else:
             print(f"bench_gate: {smoke_name} {metric}={got:.2f} "
                   f">= {floor:.2f}  OK")

@@ -12,11 +12,13 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo "== multi-device lane (8 virtual CPU devices, in-process) =="
-# The sharding-machinery tests marked needs8 only run here; the rest of
-# the file re-runs under the virtual-device topology as a bonus.
+# The sharding-machinery tests marked needs8 only run here — including
+# the sharded-VisionEngine parity tests in test_vision_serving.py (one
+# engine tick, sharded microbatch == single device; DESIGN.md §8); the
+# rest of each file re-runs under the virtual-device topology as a bonus.
 # (test_distributed.py spawns its own 8-device subprocesses from tier-1.)
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-  python -m pytest -x -q tests/test_sharding.py
+  python -m pytest -x -q tests/test_sharding.py tests/test_vision_serving.py
 
 echo "== benchmark smoke (p2m kernels, reduced shapes) =="
 python benchmarks/run.py --smoke

@@ -1,12 +1,21 @@
-"""Serving driver: continuous-batching engine on a reduced config.
+"""Serving driver: continuous-batching engines + the multi-engine front
+door that routes mixed LM/vision traffic.
+
+Single-engine LM serving (original driver):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 12 --max-batch 4
+
+Mixed LM + vision traffic through the front door:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --requests 8 --mixed --vision-requests 12
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +23,80 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models.families import get_family
-from repro.serving import Request, ServeEngine
+from repro.serving import Request, ServeEngine, VisionEngine, VisionRequest
+from repro.serving.scheduler import drive
+
+
+class FrontDoor:
+    """Multi-engine front door: one submission surface over per-modality
+    engines (DESIGN.md §8).
+
+    Requests route by type (``Request`` → the LM engine, ``VisionRequest``
+    → the vision engine); each engine keeps its own clock, queue policy,
+    and latency ledger, while the front door drives them in lockstep —
+    one front-door tick steps every engine that has work — and merges
+    their completion streams into a single list in completion order
+    (``(name, request)`` pairs; ties within a tick resolve in engine
+    registration order).
+
+    ``arrival_tick`` on submitted-via-``run`` requests is interpreted on
+    the *front door's* clock, so a mixed trace replays against one
+    timeline even though the engines tick independently.
+    """
+
+    def __init__(self, **engines):
+        if not engines:
+            raise ValueError("FrontDoor needs at least one engine")
+        self.engines = engines
+        self.tick = 0
+        self.completed: list[tuple[str, object]] = []
+
+    def _route(self, req) -> str:
+        # Route by the request type the engine's adapter consumes.
+        want = (ServeEngine if isinstance(req, Request)
+                else VisionEngine if isinstance(req, VisionRequest) else None)
+        for name, engine in self.engines.items():
+            if want is not None and isinstance(engine, want):
+                return name
+        raise TypeError(f"no engine registered for {type(req).__name__}")
+
+    def submit(self, req) -> None:
+        self.engines[self._route(req)].submit(req)
+
+    def busy(self) -> bool:
+        return any(e.busy() for e in self.engines.values())
+
+    def step(self) -> list[tuple[str, object]]:
+        """One front-door tick: step every engine in lockstep (idle
+        engines just advance their clock — the core skips the launch —
+        so engine ticks stay aligned with the front-door timeline and
+        per-engine latency counters read on one clock).  Returns this
+        tick's merged completions as ``(engine name, request)``."""
+        self.tick += 1
+        out = []
+        for name, engine in self.engines.items():
+            out.extend((name, r) for r in engine.step())
+        self.completed.extend(out)
+        return out
+
+    def run(self, requests: Sequence | None = None,
+            max_ticks: int = 10_000) -> list[tuple[str, object]]:
+        drive(self, requests, max_ticks)  # same replay as a lone engine
+        return self.completed
+
+    def latency_summary(self) -> dict:
+        return {name: engine.latency_summary()
+                for name, engine in self.engines.items()}
+
+
+def _make_vision_engine(image_size: int = 40, max_batch: int = 4):
+    from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+    from repro.serving import VisionEngine
+
+    cfg = MNV2Config(variant="p2m", image_size=image_size, width=0.25,
+                     head_channels=64)
+    params, bn = init_mnv2(jax.random.PRNGKey(1), cfg)
+    return VisionEngine(params, bn, cfg, max_batch=max_batch), cfg
 
 
 def main() -> None:
@@ -25,6 +107,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help=">1 enables the chunked-prefill fast path")
+    ap.add_argument("--mixed", action="store_true",
+                    help="route a mixed LM + vision stream via FrontDoor")
+    ap.add_argument("--vision-requests", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -37,14 +124,44 @@ def main() -> None:
 
     params, _ = family.init(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, max_batch=args.max_batch,
-                         max_len=args.max_len)
+                         max_len=args.max_len,
+                         prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
+    reqs = []
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, rng.integers(4, 12)).tolist()
-        engine.submit(Request(uid=uid, prompt=prompt,
-                              max_new_tokens=args.max_new_tokens))
+        reqs.append(Request(uid=uid, prompt=prompt,
+                            max_new_tokens=args.max_new_tokens))
+
+    if args.mixed:
+        from repro.data import SyntheticVWW
+
+        vision, vcfg = _make_vision_engine()
+        frames = SyntheticVWW(image_size=vcfg.image_size,
+                              batch=args.vision_requests).batch_at(0)["images"]
+        for uid in range(args.vision_requests):
+            reqs.append(VisionRequest(uid=1000 + uid, image=frames[uid],
+                                      arrival_tick=uid // 2))
+        door = FrontDoor(lm=engine, vision=vision)
+        t0 = time.perf_counter()
+        done = door.run(reqs)
+        dt = time.perf_counter() - t0
+        by = {"lm": [r for n, r in done if n == "lm"],
+              "vision": [r for n, r in done if n == "vision"]}
+        toks = sum(len(r.output) for r in by["lm"])
+        print(f"front door: {len(by['lm'])} LM requests ({toks} tokens) + "
+              f"{len(by['vision'])} frames in {dt:.2f}s "
+              f"({door.tick} front-door ticks)")
+        for name, s in door.latency_summary().items():
+            print(f"  {name}: launches={s['launches']} "
+                  f"mean_queue={s['mean_queue_ticks']:.2f} ticks "
+                  f"mean_launch={s['mean_launch_us'] / 1e3:.1f} ms")
+        return
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
     done = engine.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)

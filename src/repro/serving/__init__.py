@@ -1,5 +1,14 @@
+from repro.serving.scheduler import (
+    EVICTION_POLICIES,
+    ScheduledRequest,
+    SlotEngine,
+    drop_newest,
+    drop_oldest,
+)
 from repro.serving.engine import Request, ServeEngine, greedy_generate
 from repro.serving.vision import VisionEngine, VisionRequest
 
 __all__ = ["Request", "ServeEngine", "greedy_generate",
-           "VisionEngine", "VisionRequest"]
+           "VisionEngine", "VisionRequest",
+           "ScheduledRequest", "SlotEngine",
+           "EVICTION_POLICIES", "drop_newest", "drop_oldest"]

@@ -1,20 +1,31 @@
-"""Serving: batched decode with continuous batching.
+"""LM serving: batched decode with continuous batching.
 
-``ServeEngine`` maintains a fixed set of decode *slots* over one shared
-(jit-compiled) ``decode_step``.  Requests join free slots as others
-finish — no batch-boundary stalls.  Per-slot absolute positions ride in
-the ``pos`` vector; finished/inactive slots keep stepping on a pad token
-(their logits are ignored) so the compiled computation stays
-shape-stable — the standard static-batch continuous-batching trick.
+``ServeEngine`` is a thin adapter over the shared scheduler core
+(`serving/scheduler.py`, DESIGN.md §8): the core owns the arrival
+queue, the slot table, the tick loop, and the latency ledger; this
+module owns the decode state and the compiled step.  An LM slot lives
+many ticks — prefill then decode — and finished/inactive slots keep
+stepping on a pad token (their logits are ignored) so the compiled
+computation stays shape-stable — the standard static-batch
+continuous-batching trick.
 
-Prefill is token-by-token through the same decode step (correct for all
-families incl. recurrent state models; a chunked-prefill fast path is a
-documented extension point — see DESIGN.md).
+Prefill is token-by-token through the decode step by default (correct
+for all families incl. recurrent state models).  ``prefill_chunk=C``
+enables the chunked fast path: one shape-stable compiled chunk step
+advances every prefilling slot up to C prompt tokens per tick (a
+masked ``lax.scan`` over the same decode step, so outputs are
+token-identical — see ``_chunk_step_for``), collapsing C host⇄device
+round-trips and launch overheads into one.
+
+Compiled steps are cached per config (``_decode_step_for`` /
+``_chunk_step_for``), not constructed per call or per engine: repeated
+``greedy_generate`` calls and freshly constructed engines on the same
+config hit the jit compile cache instead of re-tracing.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -22,15 +33,77 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.families import get_family
+from repro.serving.scheduler import ScheduledRequest, SlotEngine
 
 
 @dataclasses.dataclass
-class Request:
+class Request(ScheduledRequest):
     uid: int
     prompt: list[int]
     max_new_tokens: int
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_step_for(cfg: ModelConfig):
+    """One-token decode step, jitted once per config.
+
+    ``params`` rides as a traced argument (not a closure) so every
+    caller — ``greedy_generate``, every ``ServeEngine`` on this config —
+    shares one compilation.
+    """
+    family = get_family(cfg)
+    return jax.jit(
+        lambda params, state, tokens, pos: family.decode(
+            params, state, tokens, pos, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_step_for(cfg: ModelConfig, chunk: int):
+    """Shape-stable chunked-prefill step: advance slot ``i`` by
+    ``n_active[i] ∈ [0, chunk]`` tokens in one compiled launch.
+
+    A masked ``lax.scan`` over the single-token decode step: at scan
+    index ``j`` a slot participates iff ``j < n_active[i]``; inactive
+    slots' state and position are carried through unchanged (the
+    ``where``-select makes the masked step the identity, so results are
+    token-identical to ``chunk`` separate decode launches).  The select
+    touches the whole decode-state tree per scan step — fine for the
+    modest chunk sizes serving uses; the payoff is one launch and one
+    host sync per tick instead of ``chunk``.
+
+    Returns ``(last_logits, new_state)`` where ``last_logits[i]`` is the
+    logits row from slot i's final *active* step — the row the engine
+    samples the next token from.
+    """
+    family = get_family(cfg)
+
+    def run(params, state, tokens, pos, n_active):
+        # tokens (B, C) int32; pos, n_active (B,) int32
+        def body(carry, xs):
+            state, pos = carry
+            tok, j = xs
+            active = j < n_active  # (B,)
+            logits, new_state = family.decode(params, state, tok[:, None],
+                                              pos, cfg)
+
+            def keep(new, old):  # batch axis is axis 1 in every state tree
+                m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+
+            state = jax.tree.map(keep, new_state, state)
+            pos = jnp.where(active, pos + 1, pos)
+            return (state, pos), logits[:, -1]
+
+        c = tokens.shape[1]
+        (state, _), outs = jax.lax.scan(
+            body, (state, pos), (tokens.T, jnp.arange(c, dtype=jnp.int32)))
+        idx = jnp.clip(n_active - 1, 0, c - 1)
+        last = outs[idx, jnp.arange(tokens.shape[0])]
+        return last, state
+
+    return jax.jit(run)
 
 
 def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array,
@@ -44,45 +117,52 @@ def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array,
     b, p = prompts.shape
     max_len = max_len or (p + steps)
     state, _ = family.init_decode_state(cfg, b, max_len)
-    step_fn = jax.jit(lambda s, t, pos: family.decode(params, s, t, pos, cfg))
+    step_fn = _decode_step_for(cfg)
 
     logits = None
     for t in range(p):
-        logits, state = step_fn(state, prompts[:, t : t + 1],
+        logits, state = step_fn(params, state, prompts[:, t : t + 1],
                                 jnp.full((b,), t, jnp.int32))
     out = []
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     for i in range(steps):
         out.append(tok[:, 0])
-        logits, state = step_fn(state, tok, jnp.full((b,), p + i, jnp.int32))
+        logits, state = step_fn(params, state, tok,
+                                jnp.full((b,), p + i, jnp.int32))
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     return jnp.stack(out, axis=1)
 
 
-class ServeEngine:
+class ServeEngine(SlotEngine):
+    """Continuous-batching LM engine: scheduler core + decode adapter.
+
+    The queue is unbounded by default (every accepted prompt is served);
+    pass ``max_queue`` to bound it — overflow then sheds per ``evict``
+    ("drop-newest" by default: an arriving request is rejected at the
+    door rather than breaking a promise already queued).
+    """
+
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, eos_id: int | None = None,
-                 pad_id: int = 0):
+                 pad_id: int = 0, prefill_chunk: int = 1,
+                 max_queue: int | None = None,
+                 evict: str = "drop-newest"):
+        super().__init__(max_batch, max_queue=max_queue, evict=evict)
         self.cfg = cfg
         self.params = params
         self.family = get_family(cfg)
-        self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
         self.pad_id = pad_id
+        self.prefill_chunk = prefill_chunk
         self.state, _ = self.family.init_decode_state(cfg, max_batch, max_len)
-        self._step = jax.jit(
-            lambda s, t, pos: self.family.decode(self.params, s, t, pos, cfg))
-        self.slots: list[Request | None] = [None] * max_batch
+        self._step = _decode_step_for(cfg)
+        self._chunk_step = (_chunk_step_for(cfg, prefill_chunk)
+                            if prefill_chunk > 1 else None)
         self._slot_pos = np.zeros(max_batch, np.int64)
         self._slot_cursor = np.zeros(max_batch, np.int64)  # prompt cursor
-        self.queue: list[Request] = []
-        self.completed: list[Request] = []
 
-    # ------------------------------------------------------------- API
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # ------------------------------------------------- adapter hooks
 
     def _reset_slot(self, i: int) -> None:
         """Zero slot i's state (batch axis = 1 across all state trees) so a
@@ -90,60 +170,66 @@ class ServeEngine:
         state."""
         self.state = jax.tree.map(lambda a: a.at[:, i].set(0), self.state)
 
-    def _admit(self) -> None:
-        for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self._reset_slot(i)
-                self.slots[i] = req
-                self._slot_pos[i] = 0
-                self._slot_cursor[i] = 0
+    def _on_admit(self, i: int, req: Request) -> None:
+        self._reset_slot(i)
+        self._slot_pos[i] = 0
+        self._slot_cursor[i] = 0
 
-    def step(self) -> None:
-        """One engine tick: every active slot advances one token."""
-        self._admit()
-        tokens = np.full((self.max_batch, 1), self.pad_id, np.int32)
-        pos = np.zeros(self.max_batch, np.int32)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+    def _launch(self, active):
+        """One decode (or chunked-prefill) launch over the slot table.
+
+        Returns ``(nxt, adv)``: per-slot sampled next token and how many
+        tokens each slot advanced this tick.
+        """
+        b = self.n_slots
+        c = self.prefill_chunk if self._chunk_step is not None else 1
+        tokens = np.full((b, c), self.pad_id, np.int32)
+        pos = np.zeros(b, np.int32)
+        adv = np.zeros(b, np.int32)
+        for i, req in active:
             cur = int(self._slot_cursor[i])
-            if cur < len(req.prompt):
-                tokens[i, 0] = req.prompt[cur]
-            elif req.output:
-                tokens[i, 0] = req.output[-1]
-            else:
-                tokens[i, 0] = self.pad_id
+            remaining = len(req.prompt) - cur
+            if remaining > 0:  # prefilling: up to C prompt tokens
+                n = min(c, remaining)
+                tokens[i, :n] = req.prompt[cur:cur + n]
+            else:  # generating: one token per tick, feed last output
+                n = 1
+                if req.output:
+                    tokens[i, 0] = req.output[-1]
             pos[i] = self._slot_pos[i]
+            adv[i] = n
 
-        logits, self.state = self._step(self.state, jnp.asarray(tokens),
-                                        jnp.asarray(pos))
-        nxt = np.asarray(jax.device_get(jnp.argmax(logits[:, -1], axis=-1)))
+        if self._chunk_step is not None and int(adv.max()) > 1:
+            last, self.state = self._chunk_step(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(adv))
+        else:
+            # Pure-decode tick (every slot advancing ≤1 token): the plain
+            # one-token step — no point scanning C-1 masked identity steps.
+            logits, self.state = self._step(self.params, self.state,
+                                            jnp.asarray(tokens[:, :1]),
+                                            jnp.asarray(pos))
+            last = logits[:, -1]
+        nxt = np.asarray(jax.device_get(jnp.argmax(last, axis=-1)))
+        return nxt, adv
 
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self._slot_pos[i] += 1
-            cur = int(self._slot_cursor[i])
-            if cur < len(req.prompt) - 1:
-                self._slot_cursor[i] = cur + 1
-                continue
-            if cur == len(req.prompt) - 1:
-                self._slot_cursor[i] = cur + 1  # prompt consumed; start emitting
-            tok = int(nxt[i])
-            req.output.append(tok)
-            if (self.eos_id is not None and tok == self.eos_id) or \
-                    len(req.output) >= req.max_new_tokens or \
-                    self._slot_pos[i] >= self.max_len - 1:
-                req.done = True
-                self.completed.append(req)
-                self.slots[i] = None  # slot freed; NOTE: state slot reused —
-                # fresh requests overwrite positions from 0 so stale KV
-                # beyond the new request's positions is masked by kv_pos.
-
-    def run(self, max_ticks: int = 10_000) -> list[Request]:
-        ticks = 0
-        while (self.queue or any(self.slots)) and ticks < max_ticks:
-            self.step()
-            ticks += 1
-        return self.completed
+    def _absorb(self, i: int, req: Request, result) -> bool:
+        nxt, adv = result
+        n = int(adv[i])
+        self._slot_pos[i] += n
+        cur = int(self._slot_cursor[i])
+        if cur < len(req.prompt):
+            self._slot_cursor[i] = cur + n
+            if cur + n < len(req.prompt):
+                return False  # prompt not consumed yet; nothing to emit
+        tok = int(nxt[i])
+        req.output.append(tok)
+        if (self.eos_id is not None and tok == self.eos_id) or \
+                len(req.output) >= req.max_new_tokens or \
+                self._slot_pos[i] >= self.max_len - 1:
+            req.done = True
+            return True
+        # slot stays occupied; NOTE: state slot reused across requests —
+        # fresh requests overwrite positions from 0 so stale KV beyond
+        # the new request's positions is masked by kv_pos.
+        return False

@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler core shared by the LM and vision engines.
+
+``ServeEngine`` (many-tick decode slots) and ``VisionEngine`` (one-tick
+microbatch slots) are the same machine wearing different compute: a
+bounded arrival queue feeding a fixed table of slots that one compiled
+launch advances every tick.  This module owns that machine — the queue
+with its pluggable eviction policy, the slot table with admit/recycle
+semantics, the tick loop with arrival replay, and the per-request
+latency ledger — so the engines reduce to three adapter hooks
+(DESIGN.md §8):
+
+  _on_admit(slot, req)   recycle the slot for a new occupant (LM: zero
+                         the decode-state column; vision: nothing)
+  _launch(active)        run ONE compiled, shape-stable launch covering
+                         every slot (free slots ride as padding) and
+                         return whatever _absorb needs
+  _absorb(slot, req, r)  fold the launch result into the request;
+                         return True when the request is finished
+                         (vision: always — a slot lives one tick)
+
+Eviction policies (applied when the bounded queue overflows on submit):
+
+  "drop-newest"  reject the arriving request (LM front door: an
+                 accepted prompt is a promise; shed load at the door)
+  "drop-oldest"  evict the oldest *waiting* request (the always-on
+                 sensor: stale frames are worthless, fresh ones are not)
+
+Latency accounting is unified and per request: ``queue_ticks`` (ticks
+between submit and first slot tick), ``serve_ticks`` (ticks occupying a
+slot — 1 for vision, prefill+decode for LM), and ``launch_wall_us``
+(summed wall-clock of the launches that served the request; for a
+one-tick vision slot this is the single batch launch it rode in).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+
+@dataclasses.dataclass(kw_only=True)
+class ScheduledRequest:
+    """Accounting fields the scheduler core maintains on every request.
+
+    Engine request types (``Request``, ``VisionRequest``) inherit from
+    this; all fields are keyword-only so subclasses keep positional
+    fields of their own.
+    """
+
+    arrival_tick: int = 0  # traffic-replay metadata; ``run`` consults it
+    submitted_tick: int = -1  # tick at which submit() saw the request
+    served_tick: int = -1  # first tick the request held a slot
+    finished_tick: int = -1  # tick the request completed
+    serve_ticks: int = 0  # ticks spent occupying a slot
+    launch_wall_us: float = 0.0  # summed wall-clock of its launches
+    evicted: bool = False
+
+    @property
+    def queue_ticks(self) -> int:
+        """Ticks spent waiting in the queue before being served."""
+        return self.served_tick - self.submitted_tick
+
+
+def drop_newest(queue: list, incoming: ScheduledRequest) -> ScheduledRequest:
+    """Reject the arriving request; the queue is untouched."""
+    return incoming
+
+
+def drop_oldest(queue: list, incoming: ScheduledRequest) -> ScheduledRequest:
+    """Evict the oldest waiting request to make room for the arrival.
+    With nothing waiting (max_queue=0) the arrival itself is shed, same
+    as drop-newest — there is no older frame to trade away."""
+    return queue.pop(0) if queue else incoming
+
+
+EVICTION_POLICIES: dict[str, Callable] = {
+    "drop-newest": drop_newest,
+    "drop-oldest": drop_oldest,
+}
+
+
+def drive(engine, requests: Sequence | None = None,
+          max_ticks: int = 10_000) -> None:
+    """Arrival-replay driver: submit each request when the clock reaches
+    its ``arrival_tick``, tick until all traffic drains.  ``engine`` is
+    anything with ``submit``/``step``/``busy``/``tick`` — a single
+    ``SlotEngine`` or the multi-engine front door — so single-engine and
+    front-door runs replay traffic with identical semantics."""
+    pending = sorted(requests or [], key=lambda r: r.arrival_tick)
+    ticks = 0
+    while (pending or engine.busy()) and ticks < max_ticks:
+        while pending and pending[0].arrival_tick <= engine.tick:
+            engine.submit(pending.pop(0))
+        engine.step()
+        ticks += 1
+
+
+class SlotEngine:
+    """The shared continuous-batching core (see module docstring).
+
+    Subclasses implement ``_on_admit`` / ``_launch`` / ``_absorb`` and
+    get submit/step/run/latency accounting for free.  Public state the
+    adapters and tests rely on:
+
+      tick        engine clock (ticks once per step, idle or not)
+      queue       waiting requests, FIFO
+      slots       fixed table, ``None`` = free
+      completed   finished requests in completion order
+      evicted     requests shed by the queue policy
+      stats       aggregate counters (launches, served, evictions,
+                  slot_ticks, busy_slot_ticks, wall_us)
+    """
+
+    def __init__(self, n_slots: int, *, max_queue: int | None = None,
+                 evict: str | Callable = "drop-newest"):
+        if isinstance(evict, str):
+            evict = EVICTION_POLICIES[evict]
+        self.n_slots = n_slots
+        self.max_queue = max_queue
+        self._evict = evict
+        self.tick = 0
+        self.queue: list = []
+        self.slots: list = [None] * n_slots
+        self.completed: list = []
+        self.evicted: list = []
+        self.stats = {"launches": 0, "served": 0, "evictions": 0,
+                      "slot_ticks": 0, "busy_slot_ticks": 0, "wall_us": 0.0}
+
+    @property
+    def max_batch(self) -> int:
+        """The slot count, under the name the engines' callers use."""
+        return self.n_slots
+
+    # -------------------------------------------------- adapter contract
+
+    def _on_admit(self, slot: int, req) -> None:
+        """Recycle ``slot`` for ``req`` (zero per-slot state, cursors)."""
+
+    def _launch(self, active: list[tuple[int, Any]]):
+        """One compiled launch over the whole slot table; ``active`` is
+        the occupied ``(slot, request)`` pairs.  Returns the per-slot
+        result object ``_absorb`` consumes."""
+        raise NotImplementedError
+
+    def _absorb(self, slot: int, req, result) -> bool:
+        """Fold this tick's result into ``req``; True ⇒ finished."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------------- API
+
+    def submit(self, req) -> None:
+        """Enqueue now.  ``arrival_tick`` is traffic-replay metadata that
+        only ``run`` consults to delay submission; calling ``submit``
+        directly means the request exists as of the current tick."""
+        req.submitted_tick = self.tick
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            victim = self._evict(self.queue, req)
+            victim.evicted = True
+            self.evicted.append(victim)
+            self.stats["evictions"] += 1
+            if victim is req:
+                return
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._on_admit(i, req)
+                self.slots[i] = req
+                req.served_tick = self.tick
+
+    def step(self) -> list:
+        """One engine tick: admit into free slots, run one launch over
+        the slot table, absorb results, release finished slots.  Returns
+        the requests that *completed* this tick (empty when idle — the
+        tick still advances, so arrival-driven ``run`` loops make
+        progress)."""
+        self.tick += 1
+        self._admit()
+        active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+
+        t0 = time.perf_counter()
+        result = self._launch(active)
+        wall_us = (time.perf_counter() - t0) * 1e6
+
+        finished = []
+        for i, req in active:
+            req.serve_ticks += 1
+            req.launch_wall_us += wall_us
+            if self._absorb(i, req, result):
+                req.finished_tick = self.tick
+                self.completed.append(req)
+                self.slots[i] = None
+                finished.append(req)
+
+        self.stats["launches"] += 1
+        self.stats["served"] += len(finished)
+        self.stats["slot_ticks"] += self.n_slots
+        self.stats["busy_slot_ticks"] += len(active)
+        self.stats["wall_us"] += wall_us
+        return finished
+
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def run(self, requests: Sequence | None = None,
+            max_ticks: int = 10_000) -> list:
+        """Drive the engine until all traffic drains.  ``requests`` with
+        ``arrival_tick`` in the future are submitted when the engine
+        clock reaches them (variable-arrival traffic replay)."""
+        drive(self, requests, max_ticks)
+        return self.completed
+
+    def latency_summary(self) -> dict:
+        """Aggregate counters: completions, slot utilization (completed /
+        slot-ticks and busy / slot-ticks over non-idle launches), mean
+        queueing delay and slot residency in ticks, mean per-launch
+        wall-clock, eviction count."""
+        served = self.stats["served"]
+        slot_ticks = self.stats["slot_ticks"]
+        return {
+            "served": served,
+            "launches": self.stats["launches"],
+            "evictions": self.stats["evictions"],
+            "utilization": served / slot_ticks if slot_ticks else 0.0,
+            "busy_utilization": (self.stats["busy_slot_ticks"] / slot_ticks
+                                 if slot_ticks else 0.0),
+            "mean_queue_ticks": (
+                sum(r.queue_ticks for r in self.completed) / served
+                if served else 0.0),
+            "mean_serve_ticks": (
+                sum(r.serve_ticks for r in self.completed) / served
+                if served else 0.0),
+            "mean_launch_us": (self.stats["wall_us"] / self.stats["launches"]
+                               if self.stats["launches"] else 0.0),
+        }

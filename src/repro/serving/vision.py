@@ -1,35 +1,40 @@
 """Batched vision serving: microbatched single-shot inference through
-the deploy-folded P²M stem + MobileNetV2 backbone (DESIGN.md §7).
+the deploy-folded P²M stem + MobileNetV2 backbone (DESIGN.md §7–§8).
 
-The LM engine (`engine.py`) keeps a request in its slot for many decode
-ticks; the vision workload is single-shot, so a slot here is a position
-in a fixed-shape microbatch that a request occupies for exactly one tick.
-Everything else mirrors ``ServeEngine``: requests queue on arrival, each
-tick admits up to ``max_batch`` of them (free slots carry a zero image
-and their logits are discarded, keeping the jitted computation
-shape-stable), one compiled forward serves the whole batch, and the
-completed list preserves submission order.
+``VisionEngine`` is a thin adapter over the shared scheduler core
+(`serving/scheduler.py`): the LM engine keeps a request in its slot for
+many decode ticks; the vision workload is single-shot, so a slot here is
+a position in a fixed-shape microbatch that a request occupies for
+exactly one tick — ``_absorb`` always reports "finished" and the core
+recycles every slot every tick.  Free slots carry a zero image and their
+logits are discarded, keeping the jitted computation shape-stable.
 
 The forward is the *deployed* model: for the P²M variant the stem runs
 with BN folded into the pixel weights and (optionally) PTQ-quantized —
 i.e. what the manufactured sensor + SoC would execute, served through
 the fused implicit-im2col conv path (`core.p2m_conv._resolve_impl`).
 
-Latency accounting is per request: ticks spent queued, the serving
-tick, and the wall-clock of the launch that served it — enough to read
-queueing delay and batch amortization separately.  The bounded queue
-evicts the *oldest* waiting request on overflow (the always-on-sensor
-policy: stale frames are worthless; fresh ones are not).
+Scale-out (``mesh=``): pass a data mesh and the padded microbatch is
+split across devices under the pure-DP vision plan (DESIGN.md §7.1 —
+`vision_plan_for`; params/BN/deploy trees replicate, the image batch
+dim shards, the probs come back replicated).  The adapter is otherwise
+identical, so every queue/eviction/latency test holds sharded as-is.
+
+The bounded queue evicts the *oldest* waiting request on overflow (the
+always-on-sensor policy: stale frames are worthless; fresh ones are
+not).  Per-request latency accounting comes from the core: ticks spent
+queued, the serving tick, and the wall-clock of the launch that served
+it — enough to read queueing delay and batch amortization separately.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Sequence
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.p2m_vww import (
     SERVE_MAX_BATCH,
@@ -40,41 +45,80 @@ from repro.core.bn_fold import deploy_params
 from repro.core.pixel_model import PixelModel
 from repro.core.quant import QuantSpec, quantize_deploy
 from repro.models.mobilenetv2 import MNV2Config, apply_mnv2
+from repro.parallel import vision_plan_for
+from repro.parallel.sharding_utils import batch_shardings
+from repro.serving.scheduler import ScheduledRequest, SlotEngine
 
 
 @dataclasses.dataclass
-class VisionRequest:
+class VisionRequest(ScheduledRequest):
     uid: int
     image: np.ndarray  # (H, W, 3) float32 in [0, 1]
-    arrival_tick: int = 0  # earliest engine tick this request exists
 
     # Filled by the engine:
     label: int | None = None
     probs: np.ndarray | None = None
-    submitted_tick: int = -1
-    served_tick: int = -1
-    batch_wall_us: float = 0.0  # wall-clock of the launch that served it
-    evicted: bool = False
 
     @property
-    def queue_ticks(self) -> int:
-        """Ticks spent waiting in the queue before being served."""
-        return self.served_tick - self.submitted_tick
+    def batch_wall_us(self) -> float:
+        """Wall-clock of the (single) launch that served this request."""
+        return self.launch_wall_us
 
 
-class VisionEngine:
+def _make_forward(cfg: MNV2Config, pixel_model: PixelModel | None):
+    def forward(params, bn, dep, images):
+        logits, _ = apply_mnv2(params, bn, images, cfg, pixel_model,
+                               train=False, p2m_deploy=dep)
+        return jax.nn.softmax(logits, axis=-1)
+
+    return forward
+
+
+def _jit_forward(forward, cfg: MNV2Config, mesh: Mesh | None,
+                 batch: int | None):
+    """Jit the deploy forward, optionally under the data mesh: the
+    microbatch is split over the data axes of the pure-DP vision plan
+    (DESIGN.md §7.1) while the small param/BN/deploy trees replicate;
+    probabilities return replicated so the host-side slot bookkeeping
+    never changes."""
+    if mesh is None:
+        return jax.jit(forward)
+    plan = vision_plan_for(mesh)
+    h = w = cfg.image_size
+    img = batch_shardings(
+        jax.ShapeDtypeStruct((batch, h, w, 3), jnp.float32), plan)
+    rep = NamedSharding(mesh, P())
+    return jax.jit(forward, in_shardings=(rep, rep, rep, img),
+                   out_shardings=rep)
+
+
+@functools.lru_cache(maxsize=None)
+def _deploy_forward_for(cfg: MNV2Config, mesh: Mesh | None = None,
+                        batch: int | None = None):
+    """Deploy-mode forward, jitted once per (config, mesh) — params, BN
+    state and the folded deploy tree ride as traced arguments so every
+    engine on this config shares one compilation."""
+    return _jit_forward(_make_forward(cfg, None), cfg, mesh, batch)
+
+
+class VisionEngine(SlotEngine):
     def __init__(self, params, bn_state, cfg: MNV2Config, *,
                  pixel_model: PixelModel | None = None,
                  max_batch: int = SERVE_MAX_BATCH,
                  max_queue: int = SERVE_MAX_QUEUE,
-                 deploy_quant_bits: int | None = SERVE_QUANT_BITS):
+                 deploy_quant_bits: int | None = SERVE_QUANT_BITS,
+                 mesh: Mesh | None = None,
+                 evict: str = "drop-oldest"):
         """``deploy_quant_bits``: PTQ bit-width for the folded P²M stem
         (None ⇒ fold only, no quantization; ignored for the baseline
-        variant, which has no in-pixel layer to fold)."""
+        variant, which has no in-pixel layer to fold).  ``mesh``: shard
+        the microbatch over the mesh's data axes (None ⇒ single device).
+        """
+        super().__init__(max_batch, max_queue=max_queue, evict=evict)
         self.cfg = cfg
-        self.max_batch = max_batch
-        self.max_queue = max_queue
-        self.tick = 0
+        self.mesh = mesh
+        self._params = params
+        self._bn = bn_state
 
         dep = None
         if cfg.variant == "p2m":
@@ -84,94 +128,25 @@ class VisionEngine:
                     dep, QuantSpec(deploy_quant_bits, deploy_quant_bits))
         self._deploy = dep
 
-        def forward(images):
-            logits, _ = apply_mnv2(params, bn_state, images, cfg,
-                                   pixel_model, train=False, p2m_deploy=dep)
-            return jax.nn.softmax(logits, axis=-1)
+        if pixel_model is None:
+            self._fwd = _deploy_forward_for(cfg, mesh, max_batch)
+        else:  # PixelModel trees aren't hashable — private compilation,
+            # but the mesh (if any) still applies
+            self._fwd = _jit_forward(_make_forward(cfg, pixel_model),
+                                     cfg, mesh, max_batch)
 
-        self._fwd = jax.jit(forward)
-        self.queue: list[VisionRequest] = []
-        self.completed: list[VisionRequest] = []
-        self.evicted: list[VisionRequest] = []
-        self.stats = {"launches": 0, "served": 0, "evictions": 0,
-                      "slot_ticks": 0, "wall_us": 0.0}
+    # ------------------------------------------------- adapter hooks
 
-    # ------------------------------------------------------------- API
-
-    def submit(self, req: VisionRequest) -> None:
-        """Enqueue now.  ``arrival_tick`` is traffic-replay metadata that
-        only ``run`` consults to delay submission; calling ``submit``
-        directly means the request exists as of the current tick."""
-        req.submitted_tick = self.tick
-        if len(self.queue) >= self.max_queue:
-            victim = self.queue.pop(0)  # oldest-drop (freshness policy)
-            victim.evicted = True
-            self.evicted.append(victim)
-            self.stats["evictions"] += 1
-        self.queue.append(req)
-
-    def step(self) -> list[VisionRequest]:
-        """One engine tick: serve up to ``max_batch`` queued requests with
-        a single compiled launch.  Returns the requests served this tick
-        (empty when the queue was idle — the tick still advances, so
-        arrival-driven ``run`` loops make progress)."""
-        self.tick += 1
-        batch = self.queue[: self.max_batch]
-        self.queue = self.queue[len(batch):]
-        if not batch:
-            return []
-
+    def _launch(self, active):
         h = w = self.cfg.image_size
-        images = np.zeros((self.max_batch, h, w, 3), np.float32)
-        for slot, req in enumerate(batch):
-            images[slot] = req.image
+        images = np.zeros((self.n_slots, h, w, 3), np.float32)
+        for i, req in active:
+            images[i] = req.image
+        probs = self._fwd(self._params, self._bn, self._deploy,
+                          jnp.asarray(images))
+        return np.asarray(jax.block_until_ready(probs))
 
-        t0 = time.perf_counter()
-        probs = np.asarray(
-            jax.block_until_ready(self._fwd(jnp.asarray(images))))
-        wall_us = (time.perf_counter() - t0) * 1e6
-
-        for slot, req in enumerate(batch):
-            req.probs = probs[slot]
-            req.label = int(probs[slot].argmax())
-            req.served_tick = self.tick
-            req.batch_wall_us = wall_us
-            self.completed.append(req)
-
-        self.stats["launches"] += 1
-        self.stats["served"] += len(batch)
-        self.stats["slot_ticks"] += self.max_batch
-        self.stats["wall_us"] += wall_us
-        return batch
-
-    def run(self, requests: Sequence[VisionRequest] | None = None,
-            max_ticks: int = 10_000) -> list[VisionRequest]:
-        """Drive the engine until all traffic drains.  ``requests`` with
-        ``arrival_tick`` in the future are submitted when the engine
-        clock reaches them (variable-arrival traffic replay)."""
-        pending = sorted(requests or [], key=lambda r: r.arrival_tick)
-        ticks = 0
-        while (pending or self.queue) and ticks < max_ticks:
-            while pending and pending[0].arrival_tick <= self.tick:
-                self.submit(pending.pop(0))
-            self.step()
-            ticks += 1
-        return self.completed
-
-    def latency_summary(self) -> dict:
-        """Aggregate counters: slot utilization (served / slot-ticks over
-        non-idle launches), mean queueing delay in ticks, mean per-launch
-        wall-clock, eviction count."""
-        served = self.stats["served"]
-        return {
-            "served": served,
-            "launches": self.stats["launches"],
-            "evictions": self.stats["evictions"],
-            "utilization": (served / self.stats["slot_ticks"]
-                            if self.stats["slot_ticks"] else 0.0),
-            "mean_queue_ticks": (
-                sum(r.queue_ticks for r in self.completed) / served
-                if served else 0.0),
-            "mean_launch_us": (self.stats["wall_us"] / self.stats["launches"]
-                               if self.stats["launches"] else 0.0),
-        }
+    def _absorb(self, i, req: VisionRequest, probs) -> bool:
+        req.probs = probs[i]
+        req.label = int(probs[i].argmax())
+        return True  # a vision slot lives exactly one tick

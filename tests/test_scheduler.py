@@ -1,0 +1,229 @@
+"""Scheduler core (serving/scheduler.py): eviction policies, latency
+ledger, and the adapter contract — the LM and vision engines must be the
+*same machine* (identical admit/evict/complete ordering and latency
+counters) when their slot lifetimes coincide."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_smoke_config
+from repro.data import SyntheticVWW
+from repro.models.families import get_family
+from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+from repro.serving import (
+    Request,
+    ScheduledRequest,
+    ServeEngine,
+    SlotEngine,
+    VisionEngine,
+    VisionRequest,
+)
+
+# ------------------------------------------------------------- dummy adapter
+
+
+@dataclasses.dataclass
+class _Req(ScheduledRequest):
+    uid: int = 0
+
+
+class _OneTickEngine(SlotEngine):
+    """Minimal adapter: every slot lives one tick, launch is a no-op."""
+
+    def _launch(self, active):
+        return None
+
+    def _absorb(self, i, req, result):
+        return True
+
+
+class _NTickEngine(SlotEngine):
+    """Adapter whose requests occupy a slot for ``uid`` ticks (≥1)."""
+
+    def _launch(self, active):
+        return None
+
+    def _absorb(self, i, req, result):
+        return req.serve_ticks >= max(1, req.uid)
+
+
+# ------------------------------------------------------- eviction policies
+
+
+def test_drop_newest_rejects_arrivals():
+    eng = _OneTickEngine(1, max_queue=2, evict="drop-newest")
+    reqs = [_Req(uid=i) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    assert [r.uid for r in eng.evicted] == [2, 3]  # arrivals bounced
+    assert all(r.evicted for r in eng.evicted)
+    done = eng.run()
+    assert [r.uid for r in done] == [0, 1]
+    assert eng.stats["evictions"] == 2
+    assert all(not r.evicted for r in done)
+
+
+def test_drop_oldest_sheds_stale_queue():
+    eng = _OneTickEngine(1, max_queue=2, evict="drop-oldest")
+    reqs = [_Req(uid=i) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    assert [r.uid for r in eng.evicted] == [0, 1]  # oldest waiting dropped
+    done = eng.run()
+    assert [r.uid for r in done] == [2, 3]
+
+
+def test_zero_depth_queue_sheds_all_arrivals():
+    """max_queue=0 is the degenerate bound: both policies shed the
+    arrival itself (drop-oldest has no older frame to trade away)."""
+    for policy in ("drop-newest", "drop-oldest"):
+        eng = _OneTickEngine(1, max_queue=0, evict=policy)
+        eng.submit(_Req(uid=0))
+        assert [r.uid for r in eng.evicted] == [0], policy
+        assert eng.run() == []
+
+
+def test_unbounded_queue_never_evicts():
+    eng = _OneTickEngine(2)  # max_queue=None
+    for i in range(50):
+        eng.submit(_Req(uid=i))
+    done = eng.run()
+    assert [r.uid for r in done] == list(range(50))
+    assert eng.evicted == [] and eng.stats["evictions"] == 0
+
+
+def test_custom_eviction_callable():
+    """The policy slot is pluggable: a callable picking the victim."""
+    def drop_odd_uid(queue, incoming):
+        for j, r in enumerate(queue):
+            if r.uid % 2:
+                return queue.pop(j)
+        return incoming
+
+    eng = _OneTickEngine(1, max_queue=2, evict=drop_odd_uid)
+    for i in range(4):
+        eng.submit(_Req(uid=i))
+    assert [r.uid for r in eng.evicted] == [1, 3]
+    assert [r.uid for r in eng.run()] == [0, 2]
+
+
+# ------------------------------------------------------- latency ledger
+
+
+def test_latency_ledger_one_tick_slots():
+    eng = _OneTickEngine(4)
+    for i in range(5):
+        eng.submit(_Req(uid=i))
+    eng.run()
+    assert [r.queue_ticks for r in eng.completed] == [1, 1, 1, 1, 2]
+    assert all(r.serve_ticks == 1 for r in eng.completed)
+    assert all(r.finished_tick == r.served_tick for r in eng.completed)
+    s = eng.latency_summary()
+    assert s["served"] == 5 and s["launches"] == 2
+    assert s["utilization"] == pytest.approx(5 / 8)
+    assert s["busy_utilization"] == pytest.approx(5 / 8)
+    assert s["mean_queue_ticks"] == pytest.approx(6 / 5)
+    assert s["mean_serve_ticks"] == 1.0
+
+
+def test_latency_ledger_multi_tick_slots():
+    """LM-shaped lifetimes: a slot held N ticks accrues serve_ticks=N and
+    every launch it rode in lands in launch_wall_us."""
+    eng = _NTickEngine(2)
+    eng.submit(_Req(uid=3))  # 3 ticks in slot
+    eng.submit(_Req(uid=1))  # 1 tick
+    eng.submit(_Req(uid=2))  # admitted when uid=1 frees its slot
+    done = eng.run()
+    assert [r.uid for r in done] == [1, 3, 2]
+    by = {r.uid: r for r in done}
+    assert by[3].serve_ticks == 3 and by[1].serve_ticks == 1
+    assert by[2].queue_ticks == 2  # submitted @0, slot freed only @2
+    assert by[2].served_tick == 2 and by[2].finished_tick == 3
+    # busy slot-ticks: t1 both, t2 slot0+slot1(admitted uid2), t3 both = 6?
+    # t1: uid3+uid1; t2: uid3+uid2; t3: uid3+uid2 → 6 busy of 6 total
+    assert eng.stats["busy_slot_ticks"] == 6
+    assert eng.stats["slot_ticks"] == 6
+
+
+def test_idle_ticks_advance_clock_without_launch():
+    eng = _OneTickEngine(2)
+    done = eng.run([_Req(uid=0, arrival_tick=4)])
+    assert len(done) == 1
+    assert done[0].served_tick > 4
+    assert eng.stats["launches"] == 1  # idle ticks launched nothing
+
+
+# ------------------------------------- adapter equivalence (property-based)
+#
+# With one-tick lifetimes on the LM side (prompt length 1, one new token)
+# the two adapters must traverse *identical* schedules: same admit order,
+# same evictions, same completion order, same per-request tick ledger —
+# the shared core is the machine, the engines only supply the compute.
+
+_LM_CFG = get_smoke_config("llama3.2-1b").replace(dtype=jnp.float32)
+_V_CFG = MNV2Config(variant="p2m", image_size=20, width=0.25,
+                    head_channels=16)
+
+# Lazy module caches, not fixtures: the hypothesis shim hides the test's
+# parameters from pytest's fixture resolution (as hypothesis itself
+# does), so the property test takes no injected arguments.
+_MODELS: dict = {}
+
+
+def _lm_params():
+    if "lm" not in _MODELS:
+        fam = get_family(_LM_CFG)
+        _MODELS["lm"], _ = fam.init(jax.random.PRNGKey(0), _LM_CFG)
+    return _MODELS["lm"]
+
+
+def _vision_model():
+    if "vis" not in _MODELS:
+        _MODELS["vis"] = init_mnv2(jax.random.PRNGKey(0), _V_CFG)
+    return _MODELS["vis"]
+
+
+def _ledger(requests):
+    return [(r.uid, r.submitted_tick, r.served_tick, r.finished_tick,
+             r.queue_ticks, r.serve_ticks) for r in requests]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 1))
+def test_adapters_schedule_identically(seed, n_slots, max_queue, policy_ix):
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(4, 14))
+    # bursty arrivals so the bounded queue actually overflows
+    arrivals = np.sort(rng.integers(0, max(2, n_req // 2), n_req))
+    policy = ("drop-newest", "drop-oldest")[policy_ix]
+
+    params = _lm_params()
+    vparams, vbn = _vision_model()
+    imgs = SyntheticVWW(image_size=_V_CFG.image_size, batch=1,
+                        seed=0).batch_at(0)["images"]
+
+    lm = ServeEngine(params, _LM_CFG, max_batch=n_slots, max_len=16,
+                     max_queue=max_queue, evict=policy)
+    vis = VisionEngine(vparams, vbn, _V_CFG, max_batch=n_slots,
+                       max_queue=max_queue, evict=policy)
+
+    lm_reqs = [Request(uid=i, prompt=[1 + i % 7], max_new_tokens=1,
+                       arrival_tick=int(t)) for i, t in enumerate(arrivals)]
+    v_reqs = [VisionRequest(uid=i, image=imgs[0], arrival_tick=int(t))
+              for i, t in enumerate(arrivals)]
+
+    lm.run(lm_reqs)
+    vis.run(v_reqs)
+
+    assert [r.uid for r in lm.completed] == [r.uid for r in vis.completed]
+    assert [r.uid for r in lm.evicted] == [r.uid for r in vis.evicted]
+    assert _ledger(lm.completed) == _ledger(vis.completed)
+    for key in ("launches", "served", "evictions", "slot_ticks",
+                "busy_slot_ticks"):
+        assert lm.stats[key] == vis.stats[key], key
+    assert lm.tick == vis.tick

@@ -99,6 +99,62 @@ def test_recycled_slot_sees_no_stale_state(arch):
         "recycled slot leaked previous occupant's state"
 
 
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-3b"])
+def test_chunked_prefill_token_identical(arch):
+    """The chunked-prefill fast path (C prompt tokens per tick through the
+    masked-scan chunk step) must emit exactly the tokens token-by-token
+    prefill emits — prompt lengths below, at, and above the chunk size,
+    finishing at different ticks so slots recycle mid-stream."""
+    cfg, family, params = _setup(arch)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist()
+               for n in (1, 3, 5, 7, 11)]  # C=5: shorter, equal, longer
+
+    outs = {}
+    for chunk in (1, 5):
+        engine = ServeEngine(params, cfg, max_batch=2, max_len=64,
+                             prefill_chunk=chunk)
+        for uid, p in enumerate(prompts):
+            engine.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        done = engine.run()
+        assert len(done) == 5
+        outs[chunk] = ({r.uid: r.output for r in done}, engine.tick)
+
+    assert outs[5][0] == outs[1][0], "chunked prefill diverged"
+    assert outs[5][1] < outs[1][1], "chunked prefill saved no ticks"
+    for req_out in outs[5][0].values():
+        assert len(req_out) == 4
+
+
+def test_chunked_prefill_matches_reference_decode():
+    """Chunked engine output equals fresh single-request greedy decode
+    (the same invariant the token-by-token engine is held to)."""
+    cfg, family, params = _setup("rwkv6-3b")
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, 6).tolist() for _ in range(3)]
+    engine = ServeEngine(params, cfg, max_batch=2, max_len=64,
+                         prefill_chunk=4)
+    for uid, p in enumerate(prompts):
+        engine.submit(Request(uid=uid, prompt=p, max_new_tokens=5))
+    for req in engine.run():
+        assert req.output == _reference_decode(params, cfg, req.prompt, 5)
+
+
+def test_bounded_queue_drop_newest():
+    """The LM door sheds load by rejecting arrivals (an accepted prompt
+    is a promise; the queue never breaks one already made)."""
+    cfg, family, params = _setup()
+    engine = ServeEngine(params, cfg, max_batch=1, max_len=32, max_queue=2)
+    for uid in range(5):
+        engine.submit(Request(uid=uid, prompt=[uid + 1],
+                              max_new_tokens=2))
+    # slot empty until run(): all 5 submits hit the 2-deep queue
+    assert [r.uid for r in engine.evicted] == [2, 3, 4]
+    done = engine.run()
+    assert sorted(r.uid for r in done) == [0, 1]
+    assert engine.latency_summary()["evictions"] == 3
+
+
 def test_greedy_generate_shape():
     cfg, family, params = _setup()
     prompts = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)

@@ -1,6 +1,7 @@
 """Batched vision serving engine: microbatch parity with the direct
 deploy-folded forward, FIFO ordering under variable arrival, bounded
-queue eviction, and per-request latency accounting."""
+queue eviction, per-request latency accounting, and (on the CI
+multi-device lane) data-mesh-sharded microbatch parity."""
 import jax
 import numpy as np
 import pytest
@@ -103,6 +104,64 @@ def test_engine_idle_ticks_advance_to_future_arrivals():
     done = engine.run([VisionRequest(uid=0, image=imgs[0], arrival_tick=4)])
     assert len(done) == 1
     assert done[0].served_tick > 4
+
+
+# ----------------------------- multi-device lane (scripts/ci.sh re-runs
+# this test under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (CI multi-device lane)")
+
+
+@needs8
+def test_sharded_engine_matches_single_device():
+    """One engine tick with the microbatch sharded 8-way over the data
+    mesh (pure-DP vision plan, DESIGN.md §7.1) matches the single-device
+    tick within 1e-3.  One tick only: the deploy forward is stateless so
+    a single launch is the whole contract — and clip nonlinearities make
+    multi-step trajectory comparisons chaotic anyway (§7.1)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    params, bn = _model()
+    imgs = _images(8)
+    reqs = lambda: [VisionRequest(uid=i, image=imgs[i]) for i in range(8)]
+
+    single = VisionEngine(params, bn, CFG, max_batch=8)
+    sharded = VisionEngine(params, bn, CFG, max_batch=8,
+                           mesh=make_debug_mesh(8))
+    for a, b in zip(reqs(), reqs()):
+        single.submit(a)
+        sharded.submit(b)
+    d_single, d_sharded = single.step(), sharded.step()
+    assert len(d_single) == len(d_sharded) == 8
+    for a, b in zip(d_single, d_sharded):
+        assert a.uid == b.uid
+        np.testing.assert_allclose(b.probs, a.probs, rtol=1e-4, atol=1e-3)
+        assert b.label == a.label
+
+
+@needs8
+def test_sharded_engine_splits_batch_over_mesh():
+    """The *engine's* compiled forward actually distributes the
+    microbatch: lower+compile the engine's jitted function and assert
+    the image argument's per-device shard covers 1/8 of the batch (a
+    silent fallback to a replicated image sharding would keep parity
+    and throughput green — this pins the split itself)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    params, bn = _model()
+    engine = VisionEngine(params, bn, CFG, max_batch=8,
+                          mesh=make_debug_mesh(8))
+    h = CFG.image_size
+    compiled = engine._fwd.lower(
+        params, bn, engine._deploy,
+        np.zeros((8, h, h, 3), np.float32)).compile()
+    arg_shardings = jax.tree.leaves(compiled.input_shardings[0])
+    img_sh = arg_shardings[-1]  # images is the last argument
+    assert len(img_sh.device_set) == 8
+    assert not img_sh.is_fully_replicated
+    assert img_sh.shard_shape((8, h, h, 3)) == (1, h, h, 3)
 
 
 def test_engine_baseline_variant_no_deploy_fold():
