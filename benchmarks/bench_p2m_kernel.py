@@ -94,7 +94,7 @@ def _run_matmul_cases(model, *, smoke: bool) -> None:
         pr_fn = jax.jit(lambda x, w, s: p2m_matmul_jnp(x, w, s, pruned, ADC, "quant"))
         t_pr = timeit(pr_fn, x, w, s, iters=iters)
         emit(f"p2m_pruned4_{name}", t_pr,
-             f"4-term basis (EXPERIMENTS.md SPerf A.2); {t_basis / t_pr:.2f}x vs 9-term")
+             f"4-term basis (EXPERIMENTS.md §Perf A.2); {t_basis / t_pr:.2f}x vs 9-term")
 
         if m <= 16384 and not smoke:
             ref_fn = jax.jit(lambda x, w: p2m_matmul_ref(x, w, model, s, ADC,

@@ -17,11 +17,19 @@ from repro.configs.p2m_vww import SERVE_MAX_BATCH
 from repro.data import SyntheticVWW
 from repro.launch.mesh import make_debug_mesh
 from repro.models.families import get_family
-from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+from repro.models.mobilenetv2 import MNV2Config, head_out_channels, init_mnv2
 from repro.optim import constant, sgd
 from repro.serving import VisionEngine, VisionRequest
 from repro.train import TrainState, make_train_step
 from repro.train.vision import make_vww_train_step
+
+
+def _reset_after_warmup(engine) -> None:
+    """Drop the warmup traffic from the ledger — its wall-clock is
+    compile time and would dominate the emitted means."""
+    engine.completed.clear()
+    for k, v in engine.stats.items():
+        engine.stats[k] = type(v)()
 
 
 def _vision_serve_case(engine: VisionEngine, imgs, n_req: int):
@@ -29,11 +37,7 @@ def _vision_serve_case(engine: VisionEngine, imgs, n_req: int):
     (µs per tick, ticks/sec, latency summary)."""
     engine.submit(VisionRequest(uid=-1, image=imgs[0]))
     engine.run()  # warmup: compile the microbatch forward
-    # Drop the warmup launch from the ledger — its wall-clock is compile
-    # time and would dominate the emitted mean_launch_us.
-    engine.completed.clear()
-    for k, v in engine.stats.items():
-        engine.stats[k] = type(v)()
+    _reset_after_warmup(engine)
     tick0 = engine.tick
     t0 = time.perf_counter()
     for uid in range(n_req):
@@ -82,6 +86,59 @@ def run_vision_serve(smoke: bool = False) -> None:
          speedup_vs_single=us_single / us_sh,
          mean_queue_ticks=s2["mean_queue_ticks"],
          mean_launch_us=s2["mean_launch_us"])
+
+
+def run_video_stream(smoke: bool = False) -> None:
+    """Streaming-video detection (video/engine.py, DESIGN.md §9): the
+    multi-tick StreamEngine over delta-gated synthetic streams.  Rows
+    carry the p2m_ prefix so the smoke run lands them in the smoke JSON
+    for `scripts/bench_gate.py`, which holds two measured floors: the
+    stem-skip rate (> 0: the gate actually gates) and the measured
+    bits/frame reduction vs dense readout (> 1: event readout transmits
+    less than re-sending every activation map).  Both are
+    machine-independent — they count frames and bits, not wall-clock."""
+    from repro.video import (DetectConfig, StreamEngine, StreamRequest,
+                             SyntheticVideo, init_detect_head)
+
+    size = 40 if smoke else 80
+    n_streams = 4 if smoke else 8
+    n_frames = 8 if smoke else 16
+    suffix = "smoke" if smoke else f"{size}px"
+    cfg = MNV2Config(variant="p2m", image_size=size, width=0.25,
+                     head_channels=64)
+    params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
+    det = init_detect_head(
+        jax.random.PRNGKey(1),
+        head_out_channels(cfg), DetectConfig())
+    engine = StreamEngine(params, bn, cfg, det, max_streams=2)
+
+    reqs = lambda: [
+        StreamRequest(uid=uid, frames=SyntheticVideo(
+            image_size=size, n_frames=n_frames, seed=uid).frames())
+        for uid in range(n_streams)]
+    engine.run([StreamRequest(uid=-1, frames=SyntheticVideo(
+        image_size=size, n_frames=1).frames())])  # warmup: compile launch
+    _reset_after_warmup(engine)
+    tick0 = engine.tick
+    t0 = time.perf_counter()
+    done = engine.run(reqs())
+    dt = time.perf_counter() - t0
+    ticks = max(engine.tick - tick0, 1)
+    s = engine.stream_summary()
+    frame_lat_us = (sum(r.frame_latency_us for r in done) / len(done)
+                    if done else 0.0)
+    emit(f"p2m_video_stream_{suffix}", dt / ticks * 1e6,
+         f"{n_streams} streams x {n_frames} frames, 2 slots; "
+         f"{ticks / dt:.0f} ticks/s; stem-skip {s['stem_skip_rate']:.2f}; "
+         f"{s['bits_per_frame']:.0f} bits/frame vs "
+         f"{s['dense_bits_per_frame']} dense "
+         f"({s['measured_reduction_vs_dense']:.2f}x measured)",
+         ticks_per_sec=ticks / dt,
+         frame_latency_us=frame_lat_us,
+         stem_skip_rate=s["stem_skip_rate"],
+         bits_per_frame=s["bits_per_frame"],
+         dense_bits_per_frame=s["dense_bits_per_frame"],
+         measured_reduction_vs_dense=s["measured_reduction_vs_dense"])
 
 
 def run() -> None:

@@ -29,15 +29,17 @@ def main() -> None:
 
     if smoke:
         # Serving rows first: bench_p2m_kernel.run writes the smoke JSON
-        # (prefix p2m_) that scripts/bench_gate.py reads, and the sharded
-        # vision-serving gate rides in it.
+        # (prefix p2m_) that scripts/bench_gate.py reads; the sharded
+        # vision-serving and video-stream gates ride in it.
         bench_train_serve.run_vision_serve(smoke=True)
+        bench_train_serve.run_video_stream(smoke=True)
         bench_p2m_kernel.run(smoke=True)
         return
     bench_paper_tables.run()
     bench_fig7_quant.run()
     bench_p2m_kernel.run()
     bench_train_serve.run()
+    bench_train_serve.run_video_stream()
     roofline.run()
 
 

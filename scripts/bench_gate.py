@@ -27,29 +27,46 @@ ROOT = Path(__file__).resolve().parents[1]
 BASELINE = ROOT / "BENCH_p2m_conv.json"
 SMOKE = ROOT / "benchmarks" / "results" / "BENCH_p2m_conv.smoke.json"
 
-# smoke row -> (baseline row, metric, floor): the smoke metric must
-# reach `floor × baseline[baseline row][metric]` — or, when the baseline
-# row is None, the absolute value `floor` (for machine-independent
-# ratios with no committed-baseline counterpart).  Floors are wide on
-# purpose — observed smoke values sit 2.5×–16× above them across runs,
-# while the regressions they guard against (silent fallback to the
-# patch path / re-differentiated backward / a sharded serving path that
-# reshards or host-syncs per tick) crater the metric well below them.
-# The bwd gate is widest: the jax.vjp comparator's wall-clock swings
-# heavily with CI load.
-GATES = {
+# smoke row -> list of (baseline row, metric, floor): the smoke metric
+# must reach `floor × baseline[baseline row][metric]` — or, when the
+# baseline row is None, the absolute value `floor` (for
+# machine-independent ratios with no committed-baseline counterpart).
+# Floors are wide on purpose — observed smoke values sit 2.5×–16× above
+# them across runs, while the regressions they guard against (silent
+# fallback to the patch path / re-differentiated backward / a sharded
+# serving path that reshards or host-syncs per tick / a delta gate that
+# stopped gating) crater the metric well below them.  The bwd gate is
+# widest: the jax.vjp comparator's wall-clock swings heavily with CI
+# load.
+GATES: dict[str, list[tuple[str | None, str, float]]] = {
     "p2m_conv_fused_smoke_b1":
-        ("p2m_conv_fused_paper_b1", "speedup_vs_patches", 0.4),
+        [("p2m_conv_fused_paper_b1", "speedup_vs_patches", 0.4)],
     "p2m_conv_fused_smoke_overlap":
-        ("p2m_conv_fused_overlap_s2_b1", "speedup_vs_patches", 0.3),
+        [("p2m_conv_fused_overlap_s2_b1", "speedup_vs_patches", 0.3)],
     "p2m_bwd_closed_smoke":
-        ("p2m_bwd_closed_paper_1img", "speedup_vs_jaxvjp", 0.15),
+        [("p2m_bwd_closed_paper_1img", "speedup_vs_jaxvjp", 0.15)],
     # Sharded vision serving (benchmarks/bench_train_serve.py): per-tick
-    # wall of the data-mesh-sharded engine vs single-device.  ~1.0 on a
-    # 1-device mesh; absolute floor, held very low for CI noise.
+    # wall of the data-mesh-sharded engine vs single-device.  Absolute
+    # floor, held very low for CI noise — and skipped entirely when the
+    # smoke row ran on a 1-device mesh (see RATIO_METRICS_NEED_DEVICES:
+    # sharded == single there, the ratio is pure timing noise).
     "p2m_vision_serve_sharded_smoke":
-        (None, "speedup_vs_single", 0.2),
+        [(None, "speedup_vs_single", 0.2)],
+    # Streaming-video detection (video/engine.py, DESIGN.md §9): both
+    # floors count frames and bits, not wall-clock, so they are exact
+    # machine-independent guards.  The smoke stream's hold=2 redundancy
+    # puts stem-skip at ~0.5 and the measured reduction at ~2.0x; a
+    # delta gate that silently stopped skipping (or a ledger that stopped
+    # metering) lands at 0.0 / 1.0.
+    "p2m_video_stream_smoke":
+        [(None, "stem_skip_rate", 0.1),
+         (None, "measured_reduction_vs_dense", 1.2)],
 }
+
+# Metrics that compare a sharded path against single-device: meaningless
+# on a 1-device mesh (the row's `devices` field says), so the gate is
+# skipped — with a log line — rather than held against noise.
+RATIO_METRICS_NEED_DEVICES = {"speedup_vs_single"}
 
 
 def _rows(path: Path) -> dict[str, dict]:
@@ -74,30 +91,38 @@ def main() -> int:
         if not (math.isfinite(t) and t > 0):
             failures.append(f"{name}: non-finite timing {t!r}")
 
-    for smoke_name, (base_name, metric, fraction) in GATES.items():
+    for smoke_name, specs in GATES.items():
         if smoke_name not in smoke:
             failures.append(f"missing smoke row {smoke_name}")
             continue
-        if base_name is None:
-            floor, source = fraction, "absolute floor"
-        elif base_name not in base or metric not in base[base_name]:
-            failures.append(f"baseline {base_name}.{metric} missing "
-                            "(regenerate BENCH_p2m_conv.json)")
-            continue
-        else:
-            floor = fraction * base[base_name][metric]
-            source = (f"= {fraction} x baseline "
-                      f"{base[base_name][metric]:.2f} from {base_name}")
-        got = smoke[smoke_name].get(metric)
-        if got is None:
-            failures.append(f"{smoke_name}: metric {metric} missing")
-        elif got < floor:
-            failures.append(
-                f"{smoke_name}: {metric}={got:.2f} below gate {floor:.2f} "
-                f"({source})")
-        else:
-            print(f"bench_gate: {smoke_name} {metric}={got:.2f} "
-                  f">= {floor:.2f}  OK")
+        row = smoke[smoke_name]
+        for base_name, metric, fraction in specs:
+            if (metric in RATIO_METRICS_NEED_DEVICES
+                    and row.get("devices") == 1):
+                print(f"bench_gate: {smoke_name} {metric} SKIPPED "
+                      "(smoke row ran on a 1-device mesh; the ratio is "
+                      "timing noise, not a sharding signal)")
+                continue
+            if base_name is None:
+                floor, source = fraction, "absolute floor"
+            elif base_name not in base or metric not in base[base_name]:
+                failures.append(f"baseline {base_name}.{metric} missing "
+                                "(regenerate BENCH_p2m_conv.json)")
+                continue
+            else:
+                floor = fraction * base[base_name][metric]
+                source = (f"= {fraction} x baseline "
+                          f"{base[base_name][metric]:.2f} from {base_name}")
+            got = row.get(metric)
+            if got is None:
+                failures.append(f"{smoke_name}: metric {metric} missing")
+            elif got < floor:
+                failures.append(
+                    f"{smoke_name}: {metric}={got:.2f} below gate "
+                    f"{floor:.2f} ({source})")
+            else:
+                print(f"bench_gate: {smoke_name} {metric}={got:.2f} "
+                      f">= {floor:.2f}  OK")
 
     if failures:
         print("bench_gate: FAIL")

@@ -22,3 +22,13 @@ SMOKE_BASELINE = MNV2Config(variant="baseline", image_size=80, width=0.25,
 SERVE_MAX_BATCH = 8
 SERVE_MAX_QUEUE = 64
 SERVE_QUANT_BITS = 8  # PTQ width for the deploy-folded stem (Table 1 N_b)
+
+# Streaming-video detection defaults (video/engine.py, DESIGN.md §9).
+# A stream occupies a slot for its whole lifetime, so the slot table is
+# narrower than the single-shot microbatch; the queue holds a couple of
+# generations of waiting streams.  Delta threshold 0.0 = lossless event
+# gating (skip only bit-identical frames — gated output == dense,
+# pinned by test); raise it to trade accuracy for readout bandwidth.
+STREAM_MAX_SLOTS = 4
+STREAM_MAX_QUEUE = 8
+STREAM_DELTA_THRESHOLD = 0.0

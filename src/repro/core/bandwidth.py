@@ -24,7 +24,13 @@ SENSOR_BIT_DEPTH = 12
 
 @dataclasses.dataclass(frozen=True)
 class FirstLayerGeom:
-    """First-layer hyperparameters (paper Table 1 defaults)."""
+    """First-layer hyperparameters (paper Table 1 defaults).
+
+    Validated on construction: ``out_spatial`` uses floor division, so a
+    kernel larger than the padded image would silently produce a
+    nonpositive output grid (and a nonsense bandwidth figure) — reject
+    those geometries instead.
+    """
 
     image_size: int = 560
     kernel: int = 5
@@ -32,6 +38,26 @@ class FirstLayerGeom:
     stride: int = 5
     out_channels: int = 8
     out_bits: int = 8
+
+    def __post_init__(self):
+        if self.image_size < 1 or self.kernel < 1:
+            raise ValueError(
+                f"image_size and kernel must be >= 1, got "
+                f"image_size={self.image_size} kernel={self.kernel}")
+        if self.padding < 0:
+            raise ValueError(f"padding must be >= 0, got {self.padding}")
+        if self.kernel > self.image_size + 2 * self.padding:
+            raise ValueError(
+                f"kernel {self.kernel} exceeds padded image "
+                f"{self.image_size} + 2*{self.padding} — out_spatial would "
+                "be nonpositive")
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        if self.out_channels < 1:
+            raise ValueError(
+                f"out_channels must be >= 1, got {self.out_channels}")
+        if self.out_bits < 1:
+            raise ValueError(f"out_bits must be >= 1, got {self.out_bits}")
 
     @property
     def out_spatial(self) -> int:
@@ -59,3 +85,73 @@ def compression_ratio(geom: FirstLayerGeom) -> float:
 
 def paper_table1_geom() -> FirstLayerGeom:
     return FirstLayerGeom()
+
+
+# ------------------------------------------------------------ event readout
+#
+# Frame-delta (event-style) extension for video streams, after
+# Neuromorphic-P2M (arXiv:2301.09111): on a temporally redundant stream
+# the sensor only reads out the P²M activation map on frames whose pixel
+# delta crossed a threshold; a skipped frame transmits a single
+# "no event" flag.  `video/delta.py` drives the measured accounting on a
+# live stream (DESIGN.md §9); the closed form below is the static
+# counterpart the bench compares it against.  See EXPERIMENTS.md
+# §Bandwidth.
+
+SKIP_FLAG_BITS = 1  # the per-frame "no event" token a skipped frame costs
+
+
+def frame_output_bits(geom: FirstLayerGeom) -> int:
+    """Dense per-frame readout: every P²M output element at ADC width."""
+    return geom.output_elems * geom.out_bits
+
+
+def event_readout_bits(geom: FirstLayerGeom, rerun_fraction: float) -> float:
+    """Closed-form mean bits/frame when a fraction of frames re-run the
+    stem and the rest transmit only the skip flag."""
+    if not 0.0 <= rerun_fraction <= 1.0:
+        raise ValueError(f"rerun_fraction must be in [0, 1], "
+                         f"got {rerun_fraction}")
+    return rerun_fraction * frame_output_bits(geom) + SKIP_FLAG_BITS
+
+
+@dataclasses.dataclass
+class StreamBandwidthLedger:
+    """Measured per-stream readout accounting: one `record` per tick.
+
+    ``bits`` is what actually crossed the sensor boundary — a skipped
+    frame costs :data:`SKIP_FLAG_BITS`, a re-run frame adds the full
+    dense readout — so ``reduction_vs_dense`` is a *measured* bandwidth
+    reduction on the stream, not the Eq. 2 closed form.
+    """
+
+    geom: FirstLayerGeom
+    frames: int = 0
+    rerun_frames: int = 0
+    bits: int = 0
+
+    def record(self, reran: bool) -> int:
+        """Account one frame; returns the bits it transmitted."""
+        cost = SKIP_FLAG_BITS + (frame_output_bits(self.geom) if reran else 0)
+        self.frames += 1
+        self.rerun_frames += int(reran)
+        self.bits += cost
+        return cost
+
+    @property
+    def skip_rate(self) -> float:
+        return 1.0 - self.rerun_frames / self.frames if self.frames else 0.0
+
+    @property
+    def bits_per_frame(self) -> float:
+        return self.bits / self.frames if self.frames else 0.0
+
+    @property
+    def dense_bits_per_frame(self) -> int:
+        return frame_output_bits(self.geom)
+
+    @property
+    def reduction_vs_dense(self) -> float:
+        """Measured dense/actual bits ratio (> 1 once any frame skips)."""
+        bpf = self.bits_per_frame
+        return self.dense_bits_per_frame / bpf if bpf else 0.0

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models.families import get_family
-from repro.serving import Request, ServeEngine, VisionEngine, VisionRequest
+from repro.serving import Request, ServeEngine, VisionRequest
 from repro.serving.scheduler import drive
 
 
@@ -31,10 +31,14 @@ class FrontDoor:
     """Multi-engine front door: one submission surface over per-modality
     engines (DESIGN.md §8).
 
-    Requests route by type (``Request`` → the LM engine, ``VisionRequest``
-    → the vision engine); each engine keeps its own clock, queue policy,
+    Requests route by each engine's declared ``request_type``
+    (``Request`` → the LM engine, ``VisionRequest`` → the vision engine,
+    ``StreamRequest`` → the multi-tick video stream engine — any
+    `SlotEngine` adapter that declares one plugs in without touching the
+    router); each engine keeps its own clock, queue policy,
     and latency ledger, while the front door drives them in lockstep —
-    one front-door tick steps every engine that has work — and merges
+    one front-door tick steps every registered engine (idle engines just
+    advance their clock, see ``step``) — and merges
     their completion streams into a single list in completion order
     (``(name, request)`` pairs; ties within a tick resolve in engine
     registration order).
@@ -52,11 +56,10 @@ class FrontDoor:
         self.completed: list[tuple[str, object]] = []
 
     def _route(self, req) -> str:
-        # Route by the request type the engine's adapter consumes.
-        want = (ServeEngine if isinstance(req, Request)
-                else VisionEngine if isinstance(req, VisionRequest) else None)
+        # Route by the request type each engine's adapter declares.
         for name, engine in self.engines.items():
-            if want is not None and isinstance(engine, want):
+            want = getattr(engine, "request_type", None)
+            if want is not None and isinstance(req, want):
                 return name
         raise TypeError(f"no engine registered for {type(req).__name__}")
 
@@ -112,6 +115,9 @@ def main() -> None:
     ap.add_argument("--mixed", action="store_true",
                     help="route a mixed LM + vision stream via FrontDoor")
     ap.add_argument("--vision-requests", type=int, default=8)
+    ap.add_argument("--video-streams", type=int, default=0,
+                    help="with --mixed: add N multi-tick video streams "
+                         "(delta-gated detection, DESIGN.md §9)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -143,16 +149,42 @@ def main() -> None:
         for uid in range(args.vision_requests):
             reqs.append(VisionRequest(uid=1000 + uid, image=frames[uid],
                                       arrival_tick=uid // 2))
-        door = FrontDoor(lm=engine, vision=vision)
+        engines = {"lm": engine, "vision": vision}
+        if args.video_streams:
+            from repro.models.mobilenetv2 import head_out_channels
+            from repro.video import (DetectConfig, StreamEngine,
+                                     StreamRequest, SyntheticVideo,
+                                     init_detect_head)
+
+            vparams, vbn = vision._params, vision._bn
+            det = init_detect_head(
+                jax.random.PRNGKey(2),
+                head_out_channels(vcfg),
+                DetectConfig())
+            engines["stream"] = StreamEngine(vparams, vbn, vcfg, det,
+                                             max_streams=2)
+            for uid in range(args.video_streams):
+                vid = SyntheticVideo(image_size=vcfg.image_size,
+                                     n_frames=8, seed=uid)
+                reqs.append(StreamRequest(uid=2000 + uid,
+                                          frames=vid.frames(),
+                                          arrival_tick=uid))
+        door = FrontDoor(**engines)
         t0 = time.perf_counter()
         done = door.run(reqs)
         dt = time.perf_counter() - t0
-        by = {"lm": [r for n, r in done if n == "lm"],
-              "vision": [r for n, r in done if n == "vision"]}
+        by = {name: [r for n, r in done if n == name] for name in engines}
         toks = sum(len(r.output) for r in by["lm"])
         print(f"front door: {len(by['lm'])} LM requests ({toks} tokens) + "
-              f"{len(by['vision'])} frames in {dt:.2f}s "
+              f"{len(by['vision'])} frames + "
+              f"{len(by.get('stream', []))} video streams in {dt:.2f}s "
               f"({door.tick} front-door ticks)")
+        if "stream" in engines:
+            s = engines["stream"].stream_summary()
+            print(f"  stream: {s['frames']} frames, "
+                  f"stem-skip {s['stem_skip_rate']:.2f}, "
+                  f"measured bandwidth reduction "
+                  f"{s['measured_reduction_vs_dense']:.2f}x vs dense")
         for name, s in door.latency_summary().items():
             print(f"  {name}: launches={s['launches']} "
                   f"mean_queue={s['mean_queue_ticks']:.2f} ticks "

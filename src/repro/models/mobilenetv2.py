@@ -70,6 +70,15 @@ def smoke_config() -> MNV2Config:
     return MNV2Config(image_size=40, width=0.25, head_channels=64)
 
 
+def head_out_channels(cfg: MNV2Config) -> int:
+    """Channel width of the pre-pool head conv — the backbone's output
+    feature dim (what `apply_mnv2_backbone` returns, and the
+    ``in_channels`` a detection head on it must take).  The head never
+    narrows below its configured width (the standard MNv2 convention:
+    the width multiplier only widens it past 1.0)."""
+    return int(round(cfg.head_channels * max(1.0, cfg.width)))
+
+
 # ------------------------------------------------------------------ layers
 
 
@@ -161,7 +170,7 @@ def init_mnv2(key: jax.Array, cfg: MNV2Config) -> tuple[dict, dict]:
             bidx += 1
             cin = c
 
-    ch = int(round(cfg.head_channels * max(1.0, cfg.width)))
+    ch = head_out_channels(cfg)
     params["head"] = {"w": _conv_init(next(keys), 1, cin, ch), "bn": _bn_init(ch)}
     state["head"] = {"bn": _bn_state(ch)}
     params["fc"] = {
@@ -174,7 +183,7 @@ def init_mnv2(key: jax.Array, cfg: MNV2Config) -> tuple[dict, dict]:
 # ------------------------------------------------------------------ apply
 
 
-def apply_mnv2(
+def apply_mnv2_stem(
     params: dict,
     state: dict,
     images: jax.Array,
@@ -184,9 +193,16 @@ def apply_mnv2(
     train: bool = False,
     p2m_deploy: dict | None = None,
 ) -> tuple[jax.Array, dict]:
-    """(B, H, W, 3) → (B, num_classes) logits, plus new state."""
-    new_state: dict[str, Any] = {}
+    """First layer only: what the sensor executes for the P²M variant.
 
+    (B, H, W, 3) → (B, Ho, Wo, C) stem activations, plus the new stem
+    state.  Split out of :func:`apply_mnv2` so the streaming-video
+    subsystem (`repro.video`, DESIGN.md §9) can cache these activations
+    per stream and skip re-running the in-pixel layer on temporally
+    redundant frames — the stem output is exactly the tensor that leaves
+    the sensor, so its recompute rate is also the readout bandwidth.
+    """
+    new_state: dict[str, Any] = {}
     if cfg.variant == "p2m":
         if p2m_deploy is not None:
             x = apply_p2m_conv_deploy(p2m_deploy, images, cfg.p2m, pixel_model)
@@ -201,7 +217,25 @@ def apply_mnv2(
         x, bn_st = _bn(x, params["stem"]["bn"], state["stem"]["bn"], train)
         x = _relu6(x)
         new_state["stem"] = {"bn": bn_st}
+    return x, new_state
 
+
+def apply_mnv2_backbone(
+    params: dict,
+    state: dict,
+    x: jax.Array,
+    cfg: MNV2Config,
+    *,
+    train: bool = False,
+) -> tuple[jax.Array, dict]:
+    """Inverted-residual stack + head conv on stem activations.
+
+    (B, Ho, Wo, C_stem) → (B, h, w, head_channels) feature map (pre
+    global-pool), plus the new block/head state.  The classification
+    head pools this; the video detection head (`video/detect.py`) reads
+    it at full spatial resolution.
+    """
+    new_state: dict[str, Any] = {}
     bidx = 0
     cin = x.shape[-1]
     for t, c, n, s in cfg.block_schedule():
@@ -234,6 +268,26 @@ def apply_mnv2(
     x, st_ = _bn(x, params["head"]["bn"], state["head"]["bn"], train)
     new_state["head"] = {"bn": st_}
     x = _relu6(x)
+    return x, new_state
+
+
+def apply_mnv2(
+    params: dict,
+    state: dict,
+    images: jax.Array,
+    cfg: MNV2Config,
+    pixel_model: PixelModel | None = None,
+    *,
+    train: bool = False,
+    p2m_deploy: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    """(B, H, W, 3) → (B, num_classes) logits, plus new state."""
+    x, stem_state = apply_mnv2_stem(
+        params, state, images, cfg, pixel_model, train=train,
+        p2m_deploy=p2m_deploy,
+    )
+    x, new_state = apply_mnv2_backbone(params, state, x, cfg, train=train)
+    new_state = {**stem_state, **new_state}
     x = x.mean(axis=(1, 2))
     logits = x @ params["fc"]["w"] + params["fc"]["b"]
     # (no "fc" entry in the state tree: the head is stateless, and the
@@ -280,7 +334,7 @@ def layer_census(cfg: MNV2Config, *, include_in_pixel: bool = False) -> list[Con
             hw = out_hw
             cin = c
 
-    ch = int(round(cfg.head_channels * max(1.0, cfg.width)))
+    ch = head_out_channels(cfg)
     census.append(ConvSpec(1, cin, ch, hw, hw))
     census.append(ConvSpec(1, ch, cfg.num_classes, 1, 1))
     return census
@@ -330,6 +384,6 @@ def peak_activation_bytes(cfg: MNV2Config, *, fused_blocks: bool) -> int:
                            out_hw * out_hw * c)
             hw = out_hw
             cin = c
-    ch = int(round(cfg.head_channels * max(1.0, cfg.width)))
+    ch = head_out_channels(cfg)
     peak = max(peak, hw * hw * cin + hw * hw * ch if fused_blocks else hw * hw * ch)
     return peak

@@ -142,6 +142,8 @@ class ServeEngine(SlotEngine):
     door rather than breaking a promise already queued).
     """
 
+    request_type = Request
+
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 2048, eos_id: int | None = None,
                  pad_id: int = 0, prefill_chunk: int = 1,

@@ -111,6 +111,12 @@ class SlotEngine:
                   slot_ticks, busy_slot_ticks, wall_us)
     """
 
+    #: Request class this adapter serves — the multi-engine front door
+    #: (`launch/serve.py::FrontDoor`) routes submissions on it, so each
+    #: adapter declares its own traffic type instead of the router
+    #: hardcoding an engine/request table.
+    request_type: type | None = None
+
     def __init__(self, n_slots: int, *, max_queue: int | None = None,
                  evict: str | Callable = "drop-newest"):
         if isinstance(evict, str):

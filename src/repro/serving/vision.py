@@ -102,6 +102,8 @@ def _deploy_forward_for(cfg: MNV2Config, mesh: Mesh | None = None,
 
 
 class VisionEngine(SlotEngine):
+    request_type = VisionRequest
+
     def __init__(self, params, bn_state, cfg: MNV2Config, *,
                  pixel_model: PixelModel | None = None,
                  max_batch: int = SERVE_MAX_BATCH,

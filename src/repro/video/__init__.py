@@ -1,0 +1,29 @@
+"""Streaming-video P²M detection subsystem (DESIGN.md §9).
+
+The always-on-sensor workload the paper targets, made continuous:
+synthetic moving-object streams (`synthetic`), a CenterNet-lite
+detection head on the deploy-folded P²M-MobileNetV2 backbone
+(`detect`), greedy-IoU tracking (`track`), temporal delta gating with
+measured readout-bandwidth accounting (`delta`), and the multi-tick
+`StreamEngine` over the shared scheduler core (`engine`).
+"""
+from repro.video.delta import DeltaGate, DeltaGateConfig, frame_delta
+from repro.video.detect import (
+    DetectConfig,
+    apply_detect_head,
+    decode_detections,
+    detect_loss,
+    init_detect_head,
+    render_targets,
+)
+from repro.video.engine import StreamEngine, StreamRequest
+from repro.video.synthetic import SyntheticVideo
+from repro.video.track import Track, Tracker, iou_matrix
+
+__all__ = [
+    "DeltaGate", "DeltaGateConfig", "frame_delta",
+    "DetectConfig", "apply_detect_head", "decode_detections",
+    "detect_loss", "init_detect_head", "render_targets",
+    "StreamEngine", "StreamRequest", "SyntheticVideo",
+    "Track", "Tracker", "iou_matrix",
+]

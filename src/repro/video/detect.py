@@ -1,0 +1,168 @@
+"""Anchor-free detection head on the P²M-MobileNetV2 backbone.
+
+CenterNet-lite after P2M-DeTrack (arXiv:2205.14285): the deploy-folded
+P²M stem + MobileNetV2 backbone (`models/mobilenetv2.py` —
+``apply_mnv2_stem`` / ``apply_mnv2_backbone``, so the first layer stays
+"what the sensor executes") feeds three small convolutional heads on the
+pre-pool feature map:
+
+* **heatmap** (B, h, w, 1): sigmoid objectness, peaks at object centers;
+* **size** (B, h, w, 2): sigmoid-normalized box width/height;
+* **offset** (B, h, w, 2): sub-cell center offset in [0, 1).
+
+``decode_detections`` is shape-stable (fixed top-k) so it lives inside
+the engine's one compiled launch: 3×3 local-max suppression on the
+heatmap, top-k peaks, boxes assembled from the size/offset heads in
+normalized ``x0, y0, x1, y1`` coordinates.  Host-side score filtering
+and greedy-IoU association happen in `video/track.py`.
+
+``detect_loss`` (penalty-reduced focal + masked L1, the CenterNet
+recipe) and ``render_targets`` make the head trainable end-to-end on
+`video/synthetic.py` ground truth; tests pin one descending step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectConfig:
+    """Head hyperparameters (kept lite: one shared 3×3, three 1×1s)."""
+
+    head_channels: int = 32
+    max_dets: int = 8  # top-k peaks per frame (shape-stable decode)
+    score_thresh: float = 0.3  # host-side filter before track association
+    prior_logit: float = -2.19  # heatmap bias init: sigmoid ≈ 0.1 prior
+
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * (
+        2.0 / fan_in) ** 0.5
+
+
+def init_detect_head(key: jax.Array, in_channels: int,
+                     dcfg: DetectConfig) -> dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ch = dcfg.head_channels
+    return {
+        "shared": {"w": _conv_init(k1, 3, in_channels, ch),
+                   "b": jnp.zeros((ch,), jnp.float32)},
+        "heatmap": {"w": _conv_init(k2, 1, ch, 1),
+                    "b": jnp.full((1,), dcfg.prior_logit, jnp.float32)},
+        "size": {"w": _conv_init(k3, 1, ch, 2),
+                 "b": jnp.zeros((2,), jnp.float32)},
+        "offset": {"w": _conv_init(k4, 1, ch, 2),
+                   "b": jnp.zeros((2,), jnp.float32)},
+    }
+
+
+def _conv(x, p):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+
+
+def det_grid(stem_spatial: int) -> int:
+    """Detection-grid side for a given P²M stem resolution: the backbone
+    pools 32× below the stem, far too coarse to localize on — CenterNet
+    recovers resolution with deconv stages; the lite version nearest-
+    upsamples the final feature map to stem/2 (56² at paper geometry)."""
+    return max(1, stem_spatial // 2)
+
+
+def apply_detect_head(det_params: dict, feats: jax.Array,
+                      grid: int) -> dict[str, jax.Array]:
+    """(B, h, w, C) backbone features → raw head outputs on the
+    ``grid``×``grid`` detection grid (pre-decode)."""
+    b, _, _, c = feats.shape
+    z = jax.image.resize(feats, (b, grid, grid, c), method="nearest")
+    z = jax.nn.relu(_conv(z, det_params["shared"]))
+    return {
+        "heatmap": jax.nn.sigmoid(_conv(z, det_params["heatmap"])),
+        "size": jax.nn.sigmoid(_conv(z, det_params["size"])),
+        "offset": jax.nn.sigmoid(_conv(z, det_params["offset"])),
+    }
+
+
+def decode_detections(outs: dict[str, jax.Array],
+                      k: int) -> tuple[jax.Array, jax.Array]:
+    """Peak decode: (boxes (B, k, 4) normalized x0y0x1y1, scores (B, k)).
+
+    3×3 local-max NMS on the heatmap (a peak survives iff it equals its
+    neighborhood max), then top-k over the flattened grid — all
+    shape-stable, so it compiles into the engine launch.
+    """
+    hm = outs["heatmap"][..., 0]  # (B, h, w)
+    b, h, w = hm.shape
+    local_max = jax.lax.reduce_window(
+        hm, -jnp.inf, jax.lax.max, (1, 3, 3), (1, 1, 1), "SAME")
+    peaks = jnp.where(hm == local_max, hm, 0.0)
+    kk = min(k, h * w)  # tiny smoke grids can undercut the requested k
+    scores, idx = jax.lax.top_k(peaks.reshape(b, h * w), kk)
+    ys, xs = idx // w, idx % w  # (B, kk)
+
+    def gather_bk(m):  # (B, h, w, 2) → (B, k, 2)
+        flat = m.reshape(b, h * w, 2)
+        return jnp.take_along_axis(flat, idx[..., None], axis=1)
+
+    off = gather_bk(outs["offset"])
+    wh = gather_bk(outs["size"])
+    cx = (xs.astype(jnp.float32) + off[..., 0]) / w
+    cy = (ys.astype(jnp.float32) + off[..., 1]) / h
+    boxes = jnp.stack([cx - wh[..., 0] / 2, cy - wh[..., 1] / 2,
+                       cx + wh[..., 0] / 2, cy + wh[..., 1] / 2], axis=-1)
+    if kk < k:  # pad to the contracted (B, k, ·) shape; score 0 never
+        boxes = jnp.pad(boxes, ((0, 0), (0, k - kk), (0, 0)))  # survives
+        scores = jnp.pad(scores, ((0, 0), (0, k - kk)))  # the host filter
+    return boxes, scores
+
+
+# ------------------------------------------------------------------ training
+
+
+def render_targets(boxes: np.ndarray, h: int, w: int) -> dict[str, np.ndarray]:
+    """Ground-truth maps for one frame's (N, 4) normalized boxes:
+    gaussian-splatted heatmap, size/offset at center cells, and the
+    center-cell mask the regression losses are gated by."""
+    hm = np.zeros((h, w, 1), np.float32)
+    size = np.zeros((h, w, 2), np.float32)
+    off = np.zeros((h, w, 2), np.float32)
+    mask = np.zeros((h, w, 1), np.float32)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    for x0, y0, x1, y1 in np.asarray(boxes, np.float32):
+        bw, bh = max(x1 - x0, 1e-4), max(y1 - y0, 1e-4)
+        cx, cy = (x0 + x1) / 2 * w, (y0 + y1) / 2 * h
+        ix, iy = min(int(cx), w - 1), min(int(cy), h - 1)
+        sigma = max(1.0, (bw * w + bh * h) / 8.0)
+        g = np.exp(-(((xx - ix) ** 2 + (yy - iy) ** 2) / (2 * sigma**2)))
+        hm[..., 0] = np.maximum(hm[..., 0], g)
+        size[iy, ix] = [bw, bh]
+        off[iy, ix] = [cx - ix, cy - iy]
+        mask[iy, ix] = 1.0
+    return {"heatmap": hm, "size": size, "offset": off, "mask": mask}
+
+
+def detect_loss(outs: dict[str, jax.Array],
+                targets: dict[str, jax.Array]) -> jax.Array:
+    """Penalty-reduced focal loss on the heatmap + masked L1 on
+    size/offset (CenterNet Eq. 1/2/3), mean over the batch."""
+    eps = 1e-6
+    p = jnp.clip(outs["heatmap"], eps, 1.0 - eps)
+    t = targets["heatmap"]
+    pos = (t >= 1.0 - 1e-6).astype(p.dtype)
+    focal_pos = -pos * ((1 - p) ** 2) * jnp.log(p)
+    focal_neg = -(1 - pos) * ((1 - t) ** 4) * (p**2) * jnp.log(1 - p)
+    n_pos = jnp.maximum(pos.sum(), 1.0)
+    loss = (focal_pos + focal_neg).sum() / n_pos
+    m = targets["mask"]
+    loss += (jnp.abs(outs["size"] - targets["size"]) * m).sum() / jnp.maximum(
+        m.sum(), 1.0)
+    loss += (jnp.abs(outs["offset"] - targets["offset"]) * m).sum() / (
+        jnp.maximum(m.sum(), 1.0))
+    return loss

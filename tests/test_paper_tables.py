@@ -1,8 +1,17 @@
-"""Analytic reproduction of the paper's tables: bandwidth (Eq. 2-3),
-Table 2 (MAdds / peak memory), Fig. 8 EDP ratios."""
+"""Analytic reproduction of the paper's tables: bandwidth (Eq. 2-3,
+geometry validation, event-readout extension), Table 2 (MAdds / peak
+memory), Fig. 8 EDP ratios."""
 import pytest
 
-from repro.core.bandwidth import FirstLayerGeom, bandwidth_reduction, compression_ratio
+from repro.core.bandwidth import (
+    SKIP_FLAG_BITS,
+    FirstLayerGeom,
+    StreamBandwidthLedger,
+    bandwidth_reduction,
+    compression_ratio,
+    event_readout_bits,
+    frame_output_bits,
+)
 from repro.core.energy import (
     BASELINE_C_ENERGY,
     BASELINE_DELAY,
@@ -27,6 +36,60 @@ def test_bandwidth_scales_with_bits():
     g8 = FirstLayerGeom(out_bits=8)
     g4 = FirstLayerGeom(out_bits=4)
     assert abs(bandwidth_reduction(g4) / bandwidth_reduction(g8) - 2.0) < 1e-9
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kernel=600),              # kernel > padded image → out_spatial ≤ 0
+    dict(image_size=4, kernel=5),  # same, small geometry
+    dict(stride=0),                # stride must be ≥ 1
+    dict(stride=-2),
+    dict(out_bits=0),              # ADC width must be ≥ 1
+    dict(out_channels=0),
+    dict(padding=-1),
+    dict(image_size=0),
+    dict(kernel=0),
+])
+def test_first_layer_geom_rejects_degenerate(bad):
+    """`__post_init__` validation: geometries that would silently floor
+    `out_spatial` to ≤ 0 (or divide by zero downstream) raise."""
+    with pytest.raises(ValueError):
+        FirstLayerGeom(**bad)
+
+
+def test_first_layer_geom_accepts_padding_rescue():
+    """Padding can legalize a kernel bigger than the raw image."""
+    g = FirstLayerGeom(image_size=4, kernel=5, padding=1, stride=1)
+    assert g.out_spatial == 2
+
+
+# ------------------------------------------------------------ event readout
+
+
+def test_event_readout_closed_form():
+    g = FirstLayerGeom()
+    assert frame_output_bits(g) == g.output_elems * 8
+    assert event_readout_bits(g, 1.0) == frame_output_bits(g) + SKIP_FLAG_BITS
+    assert event_readout_bits(g, 0.0) == SKIP_FLAG_BITS
+    with pytest.raises(ValueError):
+        event_readout_bits(g, 1.5)
+
+
+def test_stream_bandwidth_ledger_measures_reduction():
+    """The measured ledger matches the closed form at the same rerun
+    fraction, and its reduction crosses 1 as soon as any frame skips."""
+    g = FirstLayerGeom(image_size=20, kernel=5, stride=5, out_channels=8,
+                       out_bits=8)
+    led = StreamBandwidthLedger(g)
+    for reran in [True, False, True, False]:
+        led.record(reran)
+    assert led.frames == 4 and led.rerun_frames == 2
+    assert led.skip_rate == pytest.approx(0.5)
+    assert led.bits_per_frame == pytest.approx(event_readout_bits(g, 0.5))
+    assert led.bits_per_frame < led.dense_bits_per_frame
+    assert led.reduction_vs_dense > 1.9  # ≈ 2× at half-rate reruns
+    dense = StreamBandwidthLedger(g)
+    dense.record(True)
+    assert dense.reduction_vs_dense < 1.0  # flag overhead, no skips yet
 
 
 # paper Table 2 values: (MAdds G, peak MB); peak convention per column —

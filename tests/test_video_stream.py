@@ -1,0 +1,272 @@
+"""StreamEngine: multi-tick stream slots over the scheduler core —
+delta-gated vs dense exactness (the acceptance contract), measured
+readout bandwidth, mixed-length slot occupancy, per-slot state
+isolation across recycled streams, FrontDoor routing, and (on the CI
+multi-device lane) data-mesh-sharded parity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import frame_output_bits
+from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+from repro.video import (
+    DeltaGateConfig,
+    DetectConfig,
+    StreamEngine,
+    StreamRequest,
+    SyntheticVideo,
+    init_detect_head,
+)
+
+CFG = MNV2Config(variant="p2m", image_size=20, width=0.25, head_channels=16)
+DCFG = DetectConfig(head_channels=8, max_dets=4)
+
+_MODELS: dict = {}
+
+
+def _model():
+    if not _MODELS:
+        params, bn = init_mnv2(jax.random.PRNGKey(0), CFG)
+        det = init_detect_head(jax.random.PRNGKey(1), 16, DCFG)
+        _MODELS["m"] = (params, bn, det)
+    return _MODELS["m"]
+
+
+def _engine(gate=DeltaGateConfig(threshold=0.0), **kw):
+    params, bn, det = _model()
+    kw.setdefault("max_streams", 2)
+    return StreamEngine(params, bn, CFG, det, det_cfg=DCFG, gate=gate, **kw)
+
+
+def _streams(n, n_frames=6, hold=2, **kw):
+    return [StreamRequest(
+        uid=i, frames=SyntheticVideo(image_size=CFG.image_size,
+                                     n_frames=n_frames, hold=hold,
+                                     seed=i, **kw).frames())
+        for i in range(n)]
+
+
+# ------------------------------------------------------ acceptance contract
+
+
+def test_gated_threshold_zero_exactly_matches_dense():
+    """The ISSUE acceptance pin: threshold-0 delta gating is lossless —
+    per-frame detection output (boxes AND scores) is bit-identical to
+    the dense engine on the same streams, while the gate demonstrably
+    skipped stem re-runs on the hold-redundant frames."""
+    gated = _engine(gate=DeltaGateConfig(threshold=0.0))
+    dense = _engine(gate=DeltaGateConfig(threshold=None))
+    done_g = gated.run(_streams(3))
+    done_d = dense.run(_streams(3))
+    assert [r.uid for r in done_g] == [r.uid for r in done_d]
+    assert sum(r.skip_count for r in done_g) > 0  # the gate actually gated
+    assert all(r.skip_count == 0 for r in done_d)
+    for g, d in zip(done_g, done_d):
+        assert g.frames_done == d.frames_done
+        for (bg, sg), (bd, sd) in zip(g.frame_outputs, d.frame_outputs):
+            np.testing.assert_array_equal(bg, bd)
+            np.testing.assert_array_equal(sg, sd)
+
+
+def test_measured_bits_below_dense_baseline():
+    """Hold-2 streams: ~half the frames skip, so the measured bits/frame
+    sit well below the dense readout and the ledger's reduction > 1."""
+    eng = _engine()
+    done = eng.run(_streams(2, n_frames=8, hold=2))
+    dense_bits = frame_output_bits(eng.geom)
+    for r in done:
+        assert r.skip_rate == pytest.approx(0.5)
+        assert r.bits_per_frame < dense_bits
+        assert r.reduction_vs_dense > 1.5
+        # exact accounting: rerun frames pay dense + flag, skips pay flag
+        reruns = r.frames_done - r.skip_count
+        assert r.bits == reruns * dense_bits + r.frames_done
+    s = eng.stream_summary()
+    assert s["stem_skip_rate"] == pytest.approx(0.5)
+    assert s["bits_per_frame"] < s["dense_bits_per_frame"]
+    assert s["measured_reduction_vs_dense"] > 1.5
+
+
+def test_noisy_streams_never_skip():
+    """Per-frame noise breaks bit-identity: with threshold 0 every frame
+    re-runs and the measured bits equal the dense baseline + flags."""
+    eng = _engine()
+    done = eng.run(_streams(2, noise=0.02))
+    for r in done:
+        assert r.skip_count == 0
+        assert r.bits == r.frames_done * (frame_output_bits(eng.geom) + 1)
+
+
+def test_first_frame_always_reruns():
+    """A fresh slot has no reference frame: frame 0 must re-run even on
+    an all-identical stream (hold >= n_frames)."""
+    eng = _engine(max_streams=1)
+    done = eng.run(_streams(1, n_frames=4, hold=8))
+    (r,) = done
+    assert r.skip_count == 3  # frames 1..3 identical to the reference
+    assert r.frames_done == 4
+
+
+# -------------------------------------------------- multi-tick slot model
+
+
+def test_mixed_length_streams_occupy_slots_for_their_lifetime():
+    """Streams of different lengths through a 2-slot table: serve_ticks
+    equals the stream length, a freed slot admits the next stream, and
+    completion order follows stream length not submission order."""
+    eng = _engine(max_streams=2)
+    lens = [6, 2, 3]
+    reqs = [StreamRequest(
+        uid=i, frames=SyntheticVideo(image_size=CFG.image_size,
+                                     n_frames=n, seed=i).frames())
+        for i, n in enumerate(lens)]
+    done = eng.run(reqs)
+    assert [r.uid for r in done] == [1, 2, 0]  # 2 ends @2, 3 rides @3-5
+    by = {r.uid: r for r in done}
+    for i, n in enumerate(lens):
+        assert by[i].serve_ticks == n
+        assert by[i].frames_done == n
+    assert by[2].served_tick == 3  # admitted when uid=1 freed its slot
+    # slot accounting: total busy slot-ticks == sum of stream lengths
+    assert eng.stats["busy_slot_ticks"] == sum(lens)
+
+
+def test_slot_state_isolation_across_recycled_streams():
+    """The invariant StreamEngine depends on: a recycled slot must not
+    leak gate reference frames, cached stem activations, or track ids
+    from its previous occupant.  Two identical streams served back to
+    back through ONE slot must produce identical results — including the
+    first-frame rerun and restarted track ids."""
+    eng = _engine(max_streams=1)
+    vid = SyntheticVideo(image_size=CFG.image_size, n_frames=5, hold=2,
+                         seed=3)
+    a = StreamRequest(uid=0, frames=vid.frames())
+    b = StreamRequest(uid=1, frames=vid.frames())
+    done = eng.run([a, b])
+    assert [r.uid for r in done] == [0, 1]
+    ra, rb = done
+    # identical streams, identical per-frame outputs and accounting —
+    # any leaked reference frame would turn rb's first frame into a skip
+    assert ra.skip_count == rb.skip_count
+    assert rb.frame_outputs and ra.frames_done == rb.frames_done
+    for (ba, sa), (bb, sb) in zip(ra.frame_outputs, rb.frame_outputs):
+        np.testing.assert_array_equal(ba, bb)
+        np.testing.assert_array_equal(sa, sb)
+    # track ids restart at 0 for the recycled slot's new tracker
+    ids_a = {tid for fr in ra.tracks for tid, _, _ in fr}
+    ids_b = {tid for fr in rb.tracks for tid, _, _ in fr}
+    assert ids_a == ids_b  # same stream → same (restarted) id space
+
+
+def test_latency_ledger_multi_tick_streams():
+    eng = _engine(max_streams=1)
+    done = eng.run(_streams(2, n_frames=3))
+    assert [r.queue_ticks for r in done] == [1, 4]  # second waits 3 ticks
+    assert all(r.serve_ticks == 3 for r in done)
+    assert all(r.frame_latency_us > 0 for r in done)
+
+
+# ------------------------------------------------------- front-door routing
+
+
+def test_front_door_routes_streams_next_to_lm_and_vision():
+    """StreamRequest routes to the StreamEngine while VisionRequest still
+    lands on the VisionEngine — mixed traffic, one merged completion
+    stream, per-engine clocks in lockstep."""
+    from repro.data import SyntheticVWW
+    from repro.launch.serve import FrontDoor
+    from repro.serving import VisionEngine, VisionRequest
+
+    params, bn, det = _model()
+    stream = _engine(max_streams=1)
+    vision = VisionEngine(params, bn, CFG, max_batch=2)
+    door = FrontDoor(stream=stream, vision=vision)
+
+    imgs = SyntheticVWW(image_size=CFG.image_size, batch=2).batch_at(0)["images"]
+    reqs = _streams(1, n_frames=3) + [
+        VisionRequest(uid=100 + i, image=imgs[i]) for i in range(2)]
+    merged = door.run(reqs)
+    names = [n for n, _ in merged]
+    assert names.count("stream") == 1 and names.count("vision") == 2
+    (sreq,) = [r for n, r in merged if n == "stream"]
+    assert sreq.frames_done == 3
+    assert door.tick == stream.tick == vision.tick
+
+
+def test_stream_engine_rejects_empty_stream():
+    """A zero-frame stream would occupy a slot whose launch has no frame
+    to read — shed it at submit instead of crashing the shared tick."""
+    eng = _engine(max_streams=1)
+    with pytest.raises(ValueError, match="no frames"):
+        eng.submit(StreamRequest(
+            uid=0, frames=np.empty((0, CFG.image_size, CFG.image_size, 3),
+                                   np.float32)))
+    assert not eng.busy()
+
+
+def test_stream_engine_rejects_baseline_variant():
+    params, bn = init_mnv2(jax.random.PRNGKey(0),
+                           MNV2Config(variant="baseline", image_size=20,
+                                      width=0.25, head_channels=16))
+    _, _, det = _model()
+    with pytest.raises(ValueError, match="p2m variant"):
+        StreamEngine(params, bn,
+                     MNV2Config(variant="baseline", image_size=20,
+                                width=0.25, head_channels=16), det)
+
+
+# ----------------------------- multi-device lane (scripts/ci.sh re-runs
+# this test under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (CI multi-device lane)")
+
+
+@needs8
+def test_sharded_stream_engine_matches_single_device():
+    """Data-mesh-sharded stream launch (images + cached stems + rerun
+    mask split over 8 devices; the stem cache stays device-resident and
+    sharded between ticks) matches the single-device engine within 1e-3
+    across a short multi-tick stream — the per-tick forward is
+    deterministic given its inputs, so the multi-tick comparison stays
+    well-posed (unlike training trajectories, DESIGN.md §7.1)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    params, bn, det = _model()
+    single = StreamEngine(params, bn, CFG, det, det_cfg=DCFG, max_streams=8)
+    sharded = StreamEngine(params, bn, CFG, det, det_cfg=DCFG, max_streams=8,
+                           mesh=make_debug_mesh(8))
+    d_single = single.run(_streams(8, n_frames=3))
+    d_sharded = sharded.run(_streams(8, n_frames=3))
+    assert [r.uid for r in d_single] == [r.uid for r in d_sharded]
+    for a, b in zip(d_single, d_sharded):
+        assert a.skip_count == b.skip_count
+        for (ba, sa), (bb, sb) in zip(a.frame_outputs, b.frame_outputs):
+            np.testing.assert_allclose(bb, ba, rtol=1e-4, atol=1e-3)
+            np.testing.assert_allclose(sb, sa, rtol=1e-4, atol=1e-3)
+
+
+@needs8
+def test_sharded_stream_engine_splits_batch_over_mesh():
+    """Pin the split itself: the compiled stream launch shards the image
+    and cached-stem batch dims 1/8 per device (a silent fallback to
+    replication would keep parity green)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    params, bn, det = _model()
+    eng = StreamEngine(params, bn, CFG, det, det_cfg=DCFG, max_streams=8,
+                       mesh=make_debug_mesh(8))
+    h = CFG.image_size
+    ho = CFG.p2m.out_spatial(h)
+    co = CFG.p2m.out_channels
+    compiled = eng._fwd.lower(
+        params, bn, eng._deploy, det,
+        np.zeros((8, h, h, 3), np.float32),
+        np.zeros((8, ho, ho, co), np.float32),
+        np.zeros((8,), np.bool_)).compile()
+    shardings = jax.tree.leaves(compiled.input_shardings[0])
+    img_sh = shardings[-3]  # (images, cached, rerun) are the last three
+    assert len(img_sh.device_set) == 8
+    assert not img_sh.is_fully_replicated
+    assert img_sh.shard_shape((8, h, h, 3)) == (1, h, h, 3)
