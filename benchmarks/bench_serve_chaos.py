@@ -1,0 +1,209 @@
+"""Chaos-replay bench: mixed LM/vision/stream traffic through the
+front door under seeded fault injection (DESIGN.md §10).
+
+One traffic trace — LM prompts, single frames, multi-tick video streams,
+each with seeded arrivals, deadlines, and priorities — replays twice
+through a fresh `FrontDoor`:
+
+  p2m_serve_chaos_off_smoke   zero-rate plan, injectors attached: the
+                              fault layer is on the path but injects
+                              nothing; everything must complete (the
+                              gate holds completion_rate ≥ 0.999, i.e.
+                              exactly 1.0 — the layer is free when off)
+  p2m_serve_chaos_smoke       the SMOKE_PLAN: launch raises, NaN rows,
+                              slow launches, and stuck slots at smoke
+                              rates; the engines must keep serving —
+                              never deadlock, contain every fault, and
+                              complete at least the gated floor of the
+                              non-faulted traffic
+
+Every gated metric is tick-based, not wall-clock: fault decisions are
+pure functions of (seed, tick, uid), the schedule is deterministic, so
+completion / failure / deadline-miss rates replay bit-identically on any
+machine — the floors in `scripts/bench_gate.py` are exact, not
+statistical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.launch.serve import FrontDoor
+from repro.models.families import get_family
+from repro.models.mobilenetv2 import MNV2Config, head_out_channels, init_mnv2
+from repro.serving import (
+    FaultInjector,
+    FaultPlan,
+    Request,
+    ServeEngine,
+    SMOKE_PLAN,
+    VisionEngine,
+    VisionRequest,
+)
+from repro.video import (
+    DetectConfig,
+    StreamEngine,
+    StreamRequest,
+    SyntheticVideo,
+    init_detect_head,
+)
+
+#: Replay shape (smoke scale).  Uid ranges are disjoint per modality so
+#: the injectors' poisoned_uids union indexes the whole trace.
+N_LM, N_VISION, N_STREAM = 10, 12, 4
+MAX_TICKS = 600
+
+
+@dataclasses.dataclass
+class _Models:
+    """Initialized model state shared by both replays (init + compile
+    once; fresh engines per replay)."""
+
+    lm_cfg: object
+    lm_params: object
+    vcfg: MNV2Config
+    vparams: object
+    vbn: object
+    det: object
+
+
+def _init_models(image_size: int = 40) -> _Models:
+    import jax.numpy as jnp
+
+    lm_cfg = get_smoke_config("llama3.2-1b").replace(dtype=jnp.float32)
+    lm_params, _ = get_family(lm_cfg).init(jax.random.PRNGKey(0), lm_cfg)
+    vcfg = MNV2Config(variant="p2m", image_size=image_size, width=0.25,
+                      head_channels=64)
+    vparams, vbn = init_mnv2(jax.random.PRNGKey(1), vcfg)
+    det = init_detect_head(jax.random.PRNGKey(2), head_out_channels(vcfg),
+                           DetectConfig())
+    return _Models(lm_cfg, lm_params, vcfg, vparams, vbn, det)
+
+
+def _traffic(m: _Models, seed: int = 0) -> list:
+    """The seeded mixed trace: arrivals, deadlines, priorities."""
+    rng = np.random.default_rng(seed)
+    size = m.vcfg.image_size
+    reqs: list = []
+    for uid in range(N_LM):
+        arrival = uid // 2
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, m.lm_cfg.vocab,
+                                rng.integers(4, 9)).tolist(),
+            max_new_tokens=6, arrival_tick=arrival,
+            deadline_tick=arrival + 60 + int(rng.integers(0, 20)),
+            priority=int(rng.integers(0, 3))))
+    for uid in range(N_VISION):
+        arrival = uid // 3
+        reqs.append(VisionRequest(
+            uid=1000 + uid,
+            image=rng.random((size, size, 3)).astype(np.float32),
+            arrival_tick=arrival,
+            deadline_tick=arrival + 16 + int(rng.integers(0, 8)),
+            priority=int(rng.integers(0, 3))))
+    for uid in range(N_STREAM):
+        arrival = 2 * uid
+        reqs.append(StreamRequest(
+            uid=2000 + uid,
+            frames=SyntheticVideo(image_size=size, n_frames=6,
+                                  seed=uid).frames(),
+            arrival_tick=arrival,
+            deadline_tick=arrival + 50 + int(rng.integers(0, 16)),
+            priority=int(rng.integers(0, 3))))
+    return reqs
+
+
+def _build_door(m: _Models, plan: FaultPlan | None):
+    """Fresh engines with the §10 knobs on; per-engine injectors get
+    distinct seeds so one modality's chaos never mirrors another's."""
+    def injector(k: int):
+        if plan is None:
+            return None
+        return FaultInjector(dataclasses.replace(plan, seed=plan.seed + k))
+
+    inj = [injector(k) for k in range(3)]
+    lm = ServeEngine(m.lm_params, m.lm_cfg, max_batch=4, max_len=64,
+                     max_queue=N_LM, evict="deadline", admission="deadline",
+                     max_serve_ticks=32, launch_retries=1, faults=inj[0])
+    vision = VisionEngine(m.vparams, m.vbn, m.vcfg, max_batch=4,
+                          max_queue=N_VISION, evict="deadline",
+                          admission="deadline", max_serve_ticks=8,
+                          launch_retries=1, degrade_after=6, faults=inj[1])
+    stream = StreamEngine(m.vparams, m.vbn, m.vcfg, m.det, max_streams=2,
+                          max_queue=N_STREAM, evict="deadline",
+                          admission="deadline", max_serve_ticks=32,
+                          launch_retries=1, degrade_after=6, faults=inj[2])
+    return FrontDoor(lm=lm, vision=vision, stream=stream), inj
+
+
+def _percentiles(values: list) -> dict:
+    if not values:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    arr = np.asarray(values, np.float64)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p95": float(np.percentile(arr, 95)),
+            "p99": float(np.percentile(arr, 99))}
+
+
+def replay(m: _Models, plan: FaultPlan | None, seed: int = 0) -> dict:
+    """One chaos replay; returns the tick-based metric dict."""
+    door, injectors = _build_door(m, plan)
+    reqs = _traffic(m, seed)
+    total = len(reqs)
+    t0 = time.perf_counter()
+    done = door.run(reqs, max_ticks=MAX_TICKS, on_undrained="raise")
+    wall_s = time.perf_counter() - t0
+
+    completed = [r for _, r in done]
+    failed = [r for e in door.engines.values() for r in e.failed]
+    shed = [r for e in door.engines.values() for r in e.evicted + e.rejected]
+    poisoned = set().union(*(i.poisoned_uids for i in injectors if i))
+    clean_total = [r for r in reqs if r.uid not in poisoned]
+    clean_done = [r for r in completed if r.uid not in poisoned]
+    misses = sum(r.deadline_missed for r in completed + failed + shed)
+    q = _percentiles([r.queue_ticks for r in completed])
+    s = _percentiles([r.serve_ticks for r in completed])
+    return {
+        "ticks": door.tick,
+        "wall_us_per_tick": wall_s / max(door.tick, 1) * 1e6,
+        "total": total,
+        "completion_rate": len(completed) / total,
+        "failure_rate": len(failed) / total,
+        "shed_rate": len(shed) / total,
+        "deadline_miss_rate": misses / total,
+        "nonfault_completion_rate": (
+            len(clean_done) / len(clean_total) if clean_total else 1.0),
+        "poisoned": len(poisoned),
+        "p50_queue_ticks": q["p50"], "p95_queue_ticks": q["p95"],
+        "p99_queue_ticks": q["p99"],
+        "p50_serve_ticks": s["p50"], "p95_serve_ticks": s["p95"],
+        "p99_serve_ticks": s["p99"],
+        "health": door.health(),
+    }
+
+
+def _emit(name: str, r: dict) -> None:
+    emit(name, r["wall_us_per_tick"],
+         f"{r['total']} reqs, {r['ticks']} ticks; "
+         f"complete {r['completion_rate']:.2f} "
+         f"(non-faulted {r['nonfault_completion_rate']:.2f}); "
+         f"fail {r['failure_rate']:.2f} shed {r['shed_rate']:.2f} "
+         f"miss {r['deadline_miss_rate']:.2f}; "
+         f"queue p50/p95/p99 {r['p50_queue_ticks']:.0f}/"
+         f"{r['p95_queue_ticks']:.0f}/{r['p99_queue_ticks']:.0f} ticks",
+         **{k: v for k, v in r.items() if k != "health"})
+
+
+def run(smoke: bool = False) -> None:
+    m = _init_models()
+    # Fault layer off (zero-rate plan, injectors attached): everything
+    # completes — the gate holds this at 1.0.
+    _emit("p2m_serve_chaos_off_smoke", replay(m, FaultPlan()))
+    # The smoke fault plan: containment + degradation under load.
+    _emit("p2m_serve_chaos_smoke", replay(m, SMOKE_PLAN))

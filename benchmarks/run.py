@@ -23,6 +23,7 @@ def main() -> None:
         bench_paper_tables,
         bench_fig7_quant,
         bench_p2m_kernel,
+        bench_serve_chaos,
         bench_train_serve,
         roofline,
     )
@@ -30,9 +31,10 @@ def main() -> None:
     if smoke:
         # Serving rows first: bench_p2m_kernel.run writes the smoke JSON
         # (prefix p2m_) that scripts/bench_gate.py reads; the sharded
-        # vision-serving and video-stream gates ride in it.
+        # vision-serving, video-stream, and chaos-replay gates ride in it.
         bench_train_serve.run_vision_serve(smoke=True)
         bench_train_serve.run_video_stream(smoke=True)
+        bench_serve_chaos.run(smoke=True)
         bench_p2m_kernel.run(smoke=True)
         return
     bench_paper_tables.run()
@@ -40,6 +42,7 @@ def main() -> None:
     bench_p2m_kernel.run()
     bench_train_serve.run()
     bench_train_serve.run_video_stream()
+    bench_serve_chaos.run()
     roofline.run()
 
 

@@ -61,6 +61,22 @@ GATES: dict[str, list[tuple[str | None, str, float]]] = {
     "p2m_video_stream_smoke":
         [(None, "stem_skip_rate", 0.1),
          (None, "measured_reduction_vs_dense", 1.2)],
+    # Chaos replay (benchmarks/bench_serve_chaos.py, DESIGN.md §10):
+    # fault decisions are pure functions of (seed, tick, uid) and every
+    # gated metric counts requests and ticks, not wall-clock, so these
+    # floors are exact machine-independent guards.  With the fault layer
+    # attached but injecting nothing, every request completes — a gate
+    # below 1.0 only to absorb float division.  Under the smoke plan the
+    # measured replay completes 0.77 of all traffic and 1.00 of the
+    # non-faulted traffic; the floors sit under those deterministic
+    # values, and a containment regression (a launch fault poisoning the
+    # cohort, a stuck slot deadlocking the table, a NaN escaping the
+    # guard) drops them far below.
+    "p2m_serve_chaos_off_smoke":
+        [(None, "completion_rate", 0.999)],
+    "p2m_serve_chaos_smoke":
+        [(None, "completion_rate", 0.7),
+         (None, "nonfault_completion_rate", 0.95)],
 }
 
 # Metrics that compare a sharded path against single-device: meaningless

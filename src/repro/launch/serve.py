@@ -54,6 +54,7 @@ class FrontDoor:
         self.engines = engines
         self.tick = 0
         self.completed: list[tuple[str, object]] = []
+        self.down: dict[str, str] = {}  # engine name -> failure reason
 
     def _route(self, req) -> str:
         # Route by the request type each engine's adapter declares.
@@ -63,8 +64,12 @@ class FrontDoor:
                 return name
         raise TypeError(f"no engine registered for {type(req).__name__}")
 
-    def submit(self, req) -> None:
-        self.engines[self._route(req)].submit(req)
+    def submit(self, req) -> str:
+        """Route and submit; returns the engine's admission status
+        (`ADMITTED` / a `REJECTED_*` constant).  Submissions to a down
+        engine bounce with `REJECTED_HALTED` instead of raising — one
+        modality failing must not poison the submission surface."""
+        return self.engines[self._route(req)].submit(req)
 
     def busy(self) -> bool:
         return any(e.busy() for e in self.engines.values())
@@ -74,22 +79,47 @@ class FrontDoor:
         engines just advance their clock — the core skips the launch —
         so engine ticks stay aligned with the front-door timeline and
         per-engine latency counters read on one clock).  Returns this
-        tick's merged completions as ``(engine name, request)``."""
+        tick's merged completions as ``(engine name, request)``.
+
+        Fault containment (DESIGN.md §10): an engine whose ``step``
+        escapes its own containment (a bug past the scheduler's launch
+        quarantine) is *halted*, not propagated — its queued and running
+        requests land on its ``failed`` ledger, it bounces future
+        submissions, and the other engines keep serving."""
         self.tick += 1
         out = []
         for name, engine in self.engines.items():
-            out.extend((name, r) for r in engine.step())
+            if name in self.down:
+                continue
+            try:
+                out.extend((name, r) for r in engine.step())
+            except Exception as exc:  # noqa: BLE001 — isolation boundary
+                reason = f"{type(exc).__name__}: {exc}"
+                self.down[name] = reason
+                engine.halt(reason)
         self.completed.extend(out)
         return out
 
     def run(self, requests: Sequence | None = None,
-            max_ticks: int = 10_000) -> list[tuple[str, object]]:
-        drive(self, requests, max_ticks)  # same replay as a lone engine
+            max_ticks: int = 10_000,
+            on_undrained: str = "warn") -> list[tuple[str, object]]:
+        # same replay as a lone engine
+        drive(self, requests, max_ticks, on_undrained=on_undrained)
         return self.completed
 
     def latency_summary(self) -> dict:
         return {name: engine.latency_summary()
                 for name, engine in self.engines.items()}
+
+    def health(self) -> dict:
+        """Aggregate health report: per-engine `SlotEngine.health()`
+        plus the front door's own view of which engines are down."""
+        return {
+            "tick": self.tick,
+            "down": dict(self.down),
+            "engines": {name: engine.health()
+                        for name, engine in self.engines.items()},
+        }
 
 
 def _make_vision_engine(image_size: int = 40, max_batch: int = 4):

@@ -192,6 +192,7 @@ def apply_mnv2_stem(
     *,
     train: bool = False,
     p2m_deploy: dict | None = None,
+    p2m_impl: str | None = None,
 ) -> tuple[jax.Array, dict]:
     """First layer only: what the sensor executes for the P²M variant.
 
@@ -201,15 +202,21 @@ def apply_mnv2_stem(
     per stream and skip re-running the in-pixel layer on temporally
     redundant frames — the stem output is exactly the tensor that leaves
     the sensor, so its recompute rate is also the readout bandwidth.
+
+    ``p2m_impl`` selects the conv path (`core.p2m_conv._resolve_impl`);
+    the serving engines pass ``"patches"`` here when degrading to the
+    reference conv after repeated kernel faults (DESIGN.md §10).
     """
     new_state: dict[str, Any] = {}
     if cfg.variant == "p2m":
         if p2m_deploy is not None:
-            x = apply_p2m_conv_deploy(p2m_deploy, images, cfg.p2m, pixel_model)
+            x = apply_p2m_conv_deploy(p2m_deploy, images, cfg.p2m, pixel_model,
+                                      impl=p2m_impl)
             new_state["stem"] = state["stem"]
         else:
             x, st = apply_p2m_conv_train(
-                params["stem"], state["stem"], images, cfg.p2m, pixel_model, train=train
+                params["stem"], state["stem"], images, cfg.p2m, pixel_model,
+                train=train, impl=p2m_impl
             )
             new_state["stem"] = st
     else:
@@ -280,11 +287,12 @@ def apply_mnv2(
     *,
     train: bool = False,
     p2m_deploy: dict | None = None,
+    p2m_impl: str | None = None,
 ) -> tuple[jax.Array, dict]:
     """(B, H, W, 3) → (B, num_classes) logits, plus new state."""
     x, stem_state = apply_mnv2_stem(
         params, state, images, cfg, pixel_model, train=train,
-        p2m_deploy=p2m_deploy,
+        p2m_deploy=p2m_deploy, p2m_impl=p2m_impl,
     )
     x, new_state = apply_mnv2_backbone(params, state, x, cfg, train=train)
     new_state = {**stem_state, **new_state}

@@ -1,9 +1,20 @@
 from repro.serving.scheduler import (
+    ADMITTED,
     EVICTION_POLICIES,
+    REJECTED_DEADLINE,
+    REJECTED_HALTED,
+    REJECTED_QUEUE,
     ScheduledRequest,
     SlotEngine,
     drop_newest,
     drop_oldest,
+    shed_deadline,
+)
+from repro.serving.faults import (
+    SMOKE_PLAN,
+    FaultInjector,
+    FaultPlan,
+    InjectedLaunchError,
 )
 from repro.serving.engine import Request, ServeEngine, greedy_generate
 from repro.serving.vision import VisionEngine, VisionRequest
@@ -11,4 +22,9 @@ from repro.serving.vision import VisionEngine, VisionRequest
 __all__ = ["Request", "ServeEngine", "greedy_generate",
            "VisionEngine", "VisionRequest",
            "ScheduledRequest", "SlotEngine",
-           "EVICTION_POLICIES", "drop_newest", "drop_oldest"]
+           "EVICTION_POLICIES", "drop_newest", "drop_oldest",
+           "shed_deadline",
+           "ADMITTED", "REJECTED_DEADLINE", "REJECTED_HALTED",
+           "REJECTED_QUEUE",
+           "FaultInjector", "FaultPlan", "InjectedLaunchError",
+           "SMOKE_PLAN"]

@@ -148,8 +148,11 @@ class ServeEngine(SlotEngine):
                  max_len: int = 2048, eos_id: int | None = None,
                  pad_id: int = 0, prefill_chunk: int = 1,
                  max_queue: int | None = None,
-                 evict: str = "drop-newest"):
-        super().__init__(max_batch, max_queue=max_queue, evict=evict)
+                 evict: str = "drop-newest", **core):
+        """``core`` forwards the scheduler's fault-tolerance knobs
+        (``admission`` / ``max_serve_ticks`` / ``launch_retries`` /
+        ``faults`` — DESIGN.md §10) to `SlotEngine`."""
+        super().__init__(max_batch, max_queue=max_queue, evict=evict, **core)
         self.cfg = cfg
         self.params = params
         self.family = get_family(cfg)
@@ -214,6 +217,13 @@ class ServeEngine(SlotEngine):
             last = logits[:, -1]
         nxt = np.asarray(jax.device_get(jnp.argmax(last, axis=-1)))
         return nxt, adv
+
+    def _validate(self, i: int, req: Request, result) -> bool:
+        """A sampled token is a non-negative vocab index; a corrupted
+        slot row (the int analogue of a NaN activation) fails its own
+        request, never the engine (DESIGN.md §10)."""
+        nxt, adv = result
+        return int(nxt[i]) >= 0 and int(adv[i]) >= 0
 
     def _absorb(self, i: int, req: Request, result) -> bool:
         nxt, adv = result

@@ -65,10 +65,11 @@ class VisionRequest(ScheduledRequest):
         return self.launch_wall_us
 
 
-def _make_forward(cfg: MNV2Config, pixel_model: PixelModel | None):
+def _make_forward(cfg: MNV2Config, pixel_model: PixelModel | None,
+                  impl: str | None = None):
     def forward(params, bn, dep, images):
         logits, _ = apply_mnv2(params, bn, images, cfg, pixel_model,
-                               train=False, p2m_deploy=dep)
+                               train=False, p2m_deploy=dep, p2m_impl=impl)
         return jax.nn.softmax(logits, axis=-1)
 
     return forward
@@ -94,11 +95,13 @@ def _jit_forward(forward, cfg: MNV2Config, mesh: Mesh | None,
 
 @functools.lru_cache(maxsize=None)
 def _deploy_forward_for(cfg: MNV2Config, mesh: Mesh | None = None,
-                        batch: int | None = None):
-    """Deploy-mode forward, jitted once per (config, mesh) — params, BN
-    state and the folded deploy tree ride as traced arguments so every
-    engine on this config shares one compilation."""
-    return _jit_forward(_make_forward(cfg, None), cfg, mesh, batch)
+                        batch: int | None = None, impl: str | None = None):
+    """Deploy-mode forward, jitted once per (config, mesh, conv impl) —
+    params, BN state and the folded deploy tree ride as traced arguments
+    so every engine on this config shares one compilation.  ``impl``
+    selects the stem conv path; the fault-degradation ladder requests
+    ``"patches"`` (the reference conv) after repeated kernel faults."""
+    return _jit_forward(_make_forward(cfg, None, impl), cfg, mesh, batch)
 
 
 class VisionEngine(SlotEngine):
@@ -110,17 +113,25 @@ class VisionEngine(SlotEngine):
                  max_queue: int = SERVE_MAX_QUEUE,
                  deploy_quant_bits: int | None = SERVE_QUANT_BITS,
                  mesh: Mesh | None = None,
-                 evict: str = "drop-oldest"):
+                 evict: str = "drop-oldest",
+                 degrade_after: int = 3, **core):
         """``deploy_quant_bits``: PTQ bit-width for the folded P²M stem
         (None ⇒ fold only, no quantization; ignored for the baseline
         variant, which has no in-pixel layer to fold).  ``mesh``: shard
         the microbatch over the mesh's data axes (None ⇒ single device).
+        ``degrade_after``: launch-fault count after which the engine
+        falls back from the fused conv to the patches reference path
+        (DESIGN.md §10); ``core`` forwards the scheduler's
+        fault-tolerance knobs to `SlotEngine`.
         """
-        super().__init__(max_batch, max_queue=max_queue, evict=evict)
+        super().__init__(max_batch, max_queue=max_queue, evict=evict, **core)
         self.cfg = cfg
         self.mesh = mesh
+        self.degrade_after = degrade_after
+        self._kernel_faults = 0
         self._params = params
         self._bn = bn_state
+        self._pixel_model = pixel_model
 
         dep = None
         if cfg.variant == "p2m":
@@ -138,6 +149,25 @@ class VisionEngine(SlotEngine):
                                      cfg, mesh, max_batch)
 
     # ------------------------------------------------- adapter hooks
+
+    def _on_launch_fault(self, exc: Exception) -> None:
+        """Degradation ladder, rung 1 (DESIGN.md §10): after
+        ``degrade_after`` launch faults, swap the fused-conv forward for
+        the patches reference path — the kernel that keeps failing stops
+        being on the serving path, and the engine keeps answering."""
+        self._kernel_faults += 1
+        if self.degraded is None and self._kernel_faults >= self.degrade_after:
+            self._degrade_to_patches()
+
+    def _degrade_to_patches(self) -> None:
+        self.degraded = "patches"
+        if self._pixel_model is None:
+            self._fwd = _deploy_forward_for(self.cfg, self.mesh,
+                                            self.n_slots, "patches")
+        else:
+            self._fwd = _jit_forward(
+                _make_forward(self.cfg, self._pixel_model, "patches"),
+                self.cfg, self.mesh, self.n_slots)
 
     def _launch(self, active):
         h = w = self.cfg.image_size

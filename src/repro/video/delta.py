@@ -53,10 +53,30 @@ class DeltaGate:
         self.cfg = cfg
         self.ledger = StreamBandwidthLedger(geom)
         self._ref: np.ndarray | None = None
+        self.disabled = False
+
+    def disable(self) -> None:
+        """Drop to dense for the rest of the stream (DESIGN.md §10,
+        degradation ladder rung 2): every remaining frame re-runs.  The
+        engine calls this when the cached stem fails on-device
+        validation — trusting the gate further would keep serving stale
+        or corrupted activations."""
+        self.disabled = True
+        self._ref = None
 
     def should_rerun(self, frame: np.ndarray) -> bool:
         """Decide this tick: True ⇒ the stem re-runs on ``frame``."""
+        if self.disabled:
+            return True
+        if self._ref is not None and self._ref.shape != np.shape(frame):
+            # a reference that no longer matches the stream's frames is
+            # corrupted gate state — fail safe to dense, don't compare
+            self.disable()
+            return True
         if self._ref is None or not self.cfg.enabled:
+            return True
+        if not np.isfinite(self._ref).all():
+            self.disable()
             return True
         return frame_delta(self._ref, frame) > self.cfg.threshold
 

@@ -128,25 +128,39 @@ class StreamRequest(ScheduledRequest):
 
 @functools.lru_cache(maxsize=None)
 def _stream_forward_for(cfg: MNV2Config, dcfg: DetectConfig,
-                        mesh: Mesh | None, batch: int):
+                        mesh: Mesh | None, batch: int,
+                        impl: str | None = None):
     """One compiled launch: gated stem → backbone → heads → top-k decode.
 
     Params, BN, deploy, and detection-head trees ride as traced
-    arguments so every engine on this (cfg, dcfg, mesh, batch) shares
-    one compilation; under a mesh the batched operands shard over the
-    data axes (§7.1 plan) and everything else replicates.
+    arguments so every engine on this (cfg, dcfg, mesh, batch, impl)
+    shares one compilation; under a mesh the batched operands shard over
+    the data axes (§7.1 plan) and everything else replicates.  ``impl``
+    selects the stem conv path — the degradation ladder requests
+    ``"patches"`` after repeated kernel faults (DESIGN.md §10).
+
+    The cached stem is *validated on device*: a slot whose cache holds
+    any non-finite value (a corrupted analog activation that slipped
+    into state, arXiv:2304.02968's fault class) is forced to re-run, and
+    the **effective** rerun mask returns to the host so the ledger
+    meters what actually happened and the engine can drop that slot's
+    gate to dense.  When every cache row is finite the effective mask
+    equals the requested one, so the guard is bitwise-free in the
+    fault-free path.
     """
 
     grid = det_grid(cfg.p2m.out_spatial(cfg.image_size))
 
     def forward(params, bn, dep, det, images, cached, rerun):
+        cache_ok = jnp.isfinite(cached).all(axis=(1, 2, 3))
+        rerun = rerun | ~cache_ok
         stem, _ = apply_mnv2_stem(params, bn, images, cfg, None,
-                                  train=False, p2m_deploy=dep)
+                                  train=False, p2m_deploy=dep, p2m_impl=impl)
         stem = jnp.where(rerun[:, None, None, None], stem, cached)
         feats, _ = apply_mnv2_backbone(params, bn, stem, cfg, train=False)
         boxes, scores = decode_detections(
             apply_detect_head(det, feats, grid), dcfg.max_dets)
-        return stem, boxes, scores
+        return stem, boxes, scores, rerun
 
     if mesh is None:
         return jax.jit(forward)
@@ -163,9 +177,10 @@ def _stream_forward_for(cfg: MNV2Config, dcfg: DetectConfig,
     rep = NamedSharding(mesh, P())
     # the stem comes back *sharded* (it feeds straight into next tick's
     # cached-stem operand, same sharding — no per-tick gather/reshard);
-    # only the decoded boxes/scores replicate to the host
+    # the decoded boxes/scores and effective rerun mask replicate to the
+    # host
     return jax.jit(forward, in_shardings=(rep, rep, rep, rep, img, cach, msk),
-                   out_shardings=(cach, rep, rep))
+                   out_shardings=(cach, rep, rep, rep))
 
 
 class StreamEngine(SlotEngine):
@@ -181,16 +196,24 @@ class StreamEngine(SlotEngine):
                  deploy_quant_bits: int | None = SERVE_QUANT_BITS,
                  iou_thresh: float = 0.3,
                  mesh: Mesh | None = None,
-                 evict: str = "drop-newest"):
+                 evict: str = "drop-newest",
+                 degrade_after: int = 3, **core):
         """``evict`` defaults to drop-newest: an admitted stream is a
         promise held for its whole lifetime (unlike single frames, where
-        freshness beats fairness and the vision engine drops oldest)."""
+        freshness beats fairness and the vision engine drops oldest).
+        ``degrade_after``: launch-fault count after which the stem falls
+        back to the patches reference conv; ``core`` forwards the
+        scheduler's fault-tolerance knobs (DESIGN.md §10)."""
         if cfg.variant != "p2m":
             raise ValueError("StreamEngine requires the p2m variant: stem "
                              "caching and readout accounting are defined by "
                              "the in-pixel layer")
-        super().__init__(max_streams, max_queue=max_queue, evict=evict)
+        super().__init__(max_streams, max_queue=max_queue, evict=evict,
+                         **core)
         self.cfg = cfg
+        self.degrade_after = degrade_after
+        self._kernel_faults = 0
+        self._gate_faults = 0
         self.det_cfg = det_cfg
         self.gate_cfg = gate
         self.mesh = mesh
@@ -221,12 +244,12 @@ class StreamEngine(SlotEngine):
 
     # ------------------------------------------------- adapter hooks
 
-    def submit(self, req: StreamRequest) -> None:
+    def submit(self, req: StreamRequest) -> str:
         """Reject degenerate streams at the door: an empty stream would
         otherwise occupy a slot whose launch has no frame to read."""
         if req.n_frames == 0:
             raise ValueError(f"stream {req.uid} has no frames")
-        super().submit(req)
+        return super().submit(req)
 
     def _on_admit(self, i: int, req: StreamRequest) -> None:
         """Recycle slot ``i`` for a new stream: fresh gate (no reference
@@ -238,6 +261,17 @@ class StreamEngine(SlotEngine):
         self._cached_stem = self._cached_stem.at[i].set(0.0)
         req.ledger = self._gates[i].ledger
 
+    def _on_launch_fault(self, exc: Exception) -> None:
+        """Degradation ladder, rung 1 (DESIGN.md §10): repeated kernel
+        faults swap the fused stem conv for the patches reference path —
+        the stream keeps serving on the slow-but-solid conv."""
+        self._kernel_faults += 1
+        if self.degraded is None and self._kernel_faults >= self.degrade_after:
+            self.degraded = "patches"
+            self._fwd = _stream_forward_for(self.cfg, self.det_cfg,
+                                            self.mesh, self.n_slots,
+                                            "patches")
+
     def _launch(self, active):
         h = w = self.cfg.image_size
         images = np.zeros((self.n_slots, h, w, 3), np.float32)
@@ -247,14 +281,26 @@ class StreamEngine(SlotEngine):
             frame = req.frames[req.frames_done]
             frames[i] = frame
             images[i] = frame
-            rerun[i] = self._gates[i].should_rerun(frame)
-        stem, boxes, scores = self._fwd(
+            gate = self._gates[i]
+            was_disabled = gate.disabled
+            rerun[i] = gate.should_rerun(frame)
+            if gate.disabled and not was_disabled:
+                self._gate_faults += 1  # reference failed validation
+        stem, boxes, scores, rerun_eff = self._fwd(
             self._params, self._bn, self._deploy, self._det,
             jnp.asarray(images), self._cached_stem, jnp.asarray(rerun))
         jax.block_until_ready((stem, boxes, scores))
         self._cached_stem = stem  # stays on device (sharded under a mesh)
+        rerun_eff = np.asarray(rerun_eff)
         for i, req in active:  # the per-stream ledger meters the tick
-            self._gates[i].observe(frames[i], bool(rerun[i]))
+            if rerun_eff[i] and not rerun[i]:
+                # the on-device check caught a corrupted stem cache:
+                # degradation ladder rung 2 — this stream's gate drops to
+                # dense (every remaining frame re-runs; the ledger stays
+                # honest because it meters the *effective* mask)
+                self._gates[i].disable()
+                self._gate_faults += 1
+            self._gates[i].observe(frames[i], bool(rerun_eff[i]))
         return np.asarray(boxes), np.asarray(scores)
 
     def _absorb(self, i: int, req: StreamRequest, result) -> bool:
@@ -267,6 +313,15 @@ class StreamEngine(SlotEngine):
         return req.frames_done >= req.n_frames
 
     # ------------------------------------------------------ reporting
+
+    def health(self) -> dict:
+        """Core health report plus the stream-specific degradation
+        counters: gates dropped to dense (corrupted cache or reference)
+        and kernel faults absorbed by the conv fallback."""
+        h = super().health()
+        h["gate_faults"] = self._gate_faults
+        h["kernel_faults"] = self._kernel_faults
+        return h
 
     def stream_summary(self) -> dict:
         """Aggregate stream metrics over completed requests: mean stem

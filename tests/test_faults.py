@@ -1,0 +1,666 @@
+"""Fault tolerance and overload control (DESIGN.md §10): deadline
+eviction + admission control, the slot watchdog, launch-fault
+containment, the NaN/Inf guard, the seeded fault injector (and its
+bit-for-bit freeness when off), engine degradation ladders, and
+front-door failure isolation."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.launch.serve import FrontDoor
+from repro.serving import (
+    ADMITTED,
+    REJECTED_DEADLINE,
+    REJECTED_HALTED,
+    REJECTED_QUEUE,
+    FaultInjector,
+    FaultPlan,
+    Request,
+    ScheduledRequest,
+    ServeEngine,
+    SlotEngine,
+    SMOKE_PLAN,
+    VisionEngine,
+    VisionRequest,
+    shed_deadline,
+)
+
+# ------------------------------------------------------------- dummy adapters
+
+
+@dataclasses.dataclass
+class _Req(ScheduledRequest):
+    uid: int = 0
+
+
+@dataclasses.dataclass
+class _ReqB(ScheduledRequest):
+    uid: int = 0
+
+
+@dataclasses.dataclass
+class _StreamReq(ScheduledRequest):
+    uid: int = 0
+    length: int = 1
+    observed: list = dataclasses.field(default_factory=list)
+
+
+class _OneTickEngine(SlotEngine):
+    request_type = _Req
+
+    def _launch(self, active):
+        return None
+
+    def _absorb(self, i, req, result):
+        return True
+
+
+class _StatefulStreamEngine(SlotEngine):
+    """Multi-tick adapter with observable per-slot state (the leak-probe
+    from test_scheduler.py): the occupant sees its slot counter as
+    exactly 1..length iff recycling is leak-free."""
+
+    request_type = _StreamReq
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.slot_state = [0] * self.n_slots
+
+    def _on_admit(self, i, req):
+        self.slot_state[i] = 0
+
+    def _launch(self, active):
+        for i, _ in active:
+            self.slot_state[i] += 1
+        return None
+
+    def _absorb(self, i, req, result):
+        req.observed.append(self.slot_state[i])
+        return len(req.observed) >= req.length
+
+
+class _PoisonEngine(_StatefulStreamEngine):
+    """Raises a slot-attributed fault whenever a poisoned uid occupies a
+    slot — the shape of a per-request kernel fault."""
+
+    def __init__(self, *a, poison=(), **kw):
+        super().__init__(*a, **kw)
+        self.poison = set(poison)
+
+    def _launch(self, active):
+        for i, r in active:
+            if r.uid in self.poison:
+                exc = RuntimeError(f"poisoned uid {r.uid}")
+                exc.slot = i
+                raise exc
+        return super()._launch(active)
+
+
+class _AnonFaultEngine(_OneTickEngine):
+    """Raises an *anonymous* fault (no .slot) on the given ticks."""
+
+    def __init__(self, *a, bad_ticks=(), **kw):
+        super().__init__(*a, **kw)
+        self.bad_ticks = set(bad_ticks)
+
+    def _launch(self, active):
+        if self.tick in self.bad_ticks:
+            raise RuntimeError("anonymous launch fault")
+        return None
+
+
+class _FloatEngine(SlotEngine):
+    """Launch result is a per-slot float array — NaN-guard territory."""
+
+    request_type = _Req
+
+    def _launch(self, active):
+        return np.full((self.n_slots, 3), 0.5, np.float32)
+
+    def _absorb(self, i, req, result):
+        return True
+
+
+class _BadAbsorbEngine(SlotEngine):
+    """An adapter bug past launch containment: ``_absorb`` raises."""
+
+    request_type = _ReqB
+
+    def _launch(self, active):
+        return None
+
+    def _absorb(self, i, req, result):
+        raise RuntimeError("absorb bug")
+
+
+# --------------------------------------------------- deadline shedding policy
+
+
+def test_shed_deadline_expired_waiter_first():
+    q = [_Req(uid=0, deadline_tick=9), _Req(uid=1, deadline_tick=2),
+         _Req(uid=2)]
+    inc = _Req(uid=3)
+    inc.submitted_tick = 3  # "now": uid1's deadline (2) already passed
+    victim = shed_deadline(q, inc)
+    assert victim.uid == 1
+    assert [r.uid for r in q] == [0, 2]
+
+
+def test_shed_deadline_lowest_priority_newest_within_class():
+    q = [_Req(uid=0, priority=1), _Req(uid=1, priority=0),
+         _Req(uid=2, priority=0)]
+    inc = _Req(uid=3, priority=2)
+    inc.submitted_tick = 0
+    victim = shed_deadline(q, inc)  # lowest class {1, 2}; newest is uid2
+    assert victim.uid == 2
+    assert [r.uid for r in q] == [0, 1]
+
+
+def test_shed_deadline_arrival_can_be_the_victim():
+    q = [_Req(uid=0, priority=1)]
+    inc = _Req(uid=1, priority=0)
+    inc.submitted_tick = 0
+    assert shed_deadline(q, inc) is inc
+    assert [r.uid for r in q] == [0]
+
+
+def test_engine_deadline_eviction_sheds_expired():
+    """Through the engine: a bounded 'deadline' queue sheds the expired
+    waiter for a fresh arrival, stamping its eviction tick."""
+    eng = _StatefulStreamEngine(1, max_queue=2, evict="deadline")
+    eng.submit(_StreamReq(uid=0, length=6))
+    eng.step()  # uid0 admitted into the slot; queue empty, tick=1
+    eng.submit(_StreamReq(uid=1, length=1, deadline_tick=2))
+    eng.submit(_StreamReq(uid=2, length=1))
+    eng.step()
+    eng.step()  # now tick=3 > uid1's deadline
+    assert eng.submit(_StreamReq(uid=3, length=1)) == ADMITTED
+    assert [r.uid for r in eng.evicted] == [1]
+    assert eng.evicted[0].evicted_tick == 3
+    assert eng.evicted[0].queue_ticks == 2  # never negative
+    assert eng.evicted[0].deadline_missed
+    done = eng.run()
+    assert {r.uid for r in done} == {0, 2, 3}
+
+
+# ----------------------------------------------------------- admission control
+
+
+def test_admission_control_rejects_projected_misses():
+    eng = _OneTickEngine(1, admission="deadline")
+    statuses = [eng.submit(_Req(uid=i, deadline_tick=2)) for i in range(6)]
+    assert statuses[0] == ADMITTED and statuses[1] == ADMITTED
+    assert statuses[2:] == [REJECTED_DEADLINE] * 4
+    assert [r.uid for r in eng.rejected] == [2, 3, 4, 5]
+    assert all(r.evicted and r.evicted_tick == 0 for r in eng.rejected)
+    done = eng.run()
+    assert [r.uid for r in done] == [0, 1]
+    assert all(not r.deadline_missed for r in done)
+    s = eng.latency_summary()
+    assert s["rejections"] == 4 and s["rejected"] == 4
+
+
+def test_admission_control_ignores_deadline_free_traffic():
+    eng = _OneTickEngine(1, admission="deadline")
+    assert all(eng.submit(_Req(uid=i)) == ADMITTED for i in range(10))
+    assert len(eng.run()) == 10
+
+
+def test_submit_status_on_queue_overflow():
+    eng = _OneTickEngine(1, max_queue=1, evict="drop-newest")
+    assert eng.submit(_Req(uid=0)) == ADMITTED
+    assert eng.submit(_Req(uid=1)) == REJECTED_QUEUE  # arrival bounced
+    old = _OneTickEngine(1, max_queue=1, evict="drop-oldest")
+    assert old.submit(_Req(uid=0)) == ADMITTED
+    assert old.submit(_Req(uid=1)) == ADMITTED  # the *waiter* was shed
+    assert [r.uid for r in old.evicted] == [0]
+
+
+def test_evicted_accounting_in_latency_summary():
+    eng = _StatefulStreamEngine(1, max_queue=1, evict="drop-oldest")
+    eng.submit(_StreamReq(uid=0, length=4))
+    eng.step()  # uid0 admitted; queue empty
+    eng.submit(_StreamReq(uid=1, length=1))
+    eng.step()
+    eng.submit(_StreamReq(uid=2, length=1))  # evicts uid1 at tick 2
+    assert [r.uid for r in eng.evicted] == [1]
+    assert eng.evicted[0].queue_ticks == 1  # submitted @1, shed @2
+    assert all(r.queue_ticks >= 0
+               for r in eng.evicted + eng.completed + eng.queue)
+    eng.run()
+    s = eng.latency_summary()
+    assert s["evicted"] == 1 and s["evictions"] == 1
+    assert s["failed"] == 0 and s["failures"] == 0
+
+
+# ------------------------------------------------------------- slot watchdog
+
+
+def test_watchdog_evicts_stuck_occupant_leak_free():
+    """An injected stuck request holds its slot until ``max_serve_ticks``
+    evicts it; the recycled slot serves the next stream with fresh state
+    (observed == 1..length — nothing leaked)."""
+    inj = FaultInjector(FaultPlan(stuck_uids=(0,)))
+    eng = _StatefulStreamEngine(1, max_serve_ticks=3, faults=inj)
+    done = eng.run([_StreamReq(uid=0, length=1),
+                    _StreamReq(uid=1, length=2)])
+    assert [r.uid for r in done] == [1]
+    assert done[0].observed == [1, 2]
+    assert [r.uid for r in eng.failed] == [0]
+    assert eng.failed[0].failure == "watchdog"
+    assert eng.failed[0].serve_ticks == 3
+    assert eng.stats["watchdog_evictions"] == 1
+    assert inj.counts["stuck"] == 1 and inj.poisoned_uids == {0}
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+def test_watchdog_containment_property(seed, n_slots):
+    """Property: random traffic with random stuck uids, a bounded queue,
+    and the watchdog on — the engine always drains (no deadlock), every
+    request is accounted exactly once, stuck uids land on the failed
+    ledger, and survivors observe fresh per-slot state."""
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(4, 14))
+    stuck = tuple(int(u) for u in rng.choice(n_req, n_req // 3,
+                                             replace=False))
+    inj = FaultInjector(FaultPlan(stuck_uids=stuck))
+    eng = _StatefulStreamEngine(n_slots, max_queue=4, evict="drop-newest",
+                                max_serve_ticks=4, faults=inj)
+    reqs = [_StreamReq(uid=i, length=int(rng.integers(1, 4)),
+                       arrival_tick=int(rng.integers(0, 6)))
+            for i in range(n_req)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # an undrained replay fails loudly
+        done = eng.run(reqs, max_ticks=400)
+    assert all(s is None for s in eng.slots)
+    seen = ([r.uid for r in done] + [r.uid for r in eng.failed]
+            + [r.uid for r in eng.evicted])
+    assert sorted(seen) == list(range(n_req))  # each accounted exactly once
+    assert {r.uid for r in eng.failed} == set(stuck) - {
+        r.uid for r in eng.evicted}
+    for r in done:
+        assert r.observed == list(range(1, r.length + 1)), (
+            f"slot state leaked into request {r.uid}: {r.observed}")
+
+
+# ------------------------------------------------------ drive() undrained
+
+
+def test_drive_never_silently_truncates():
+    inj = FaultInjector(FaultPlan(stuck_uids=(0,)))
+    eng = _StatefulStreamEngine(1, faults=inj)  # no watchdog: uid0 sticks
+    eng.submit(_StreamReq(uid=0, length=1))
+    with pytest.warns(RuntimeWarning, match="1 slots occupied"):
+        eng.run(max_ticks=5)
+    eng2 = _StatefulStreamEngine(1, faults=FaultInjector(
+        FaultPlan(stuck_uids=(0,))))
+    eng2.submit(_StreamReq(uid=0, length=1))
+    with pytest.raises(RuntimeError, match="undrained"):
+        eng2.run(max_ticks=5, on_undrained="raise")
+
+
+def test_drive_undrained_counts_unsubmitted_arrivals():
+    eng = _OneTickEngine(1)
+    with pytest.warns(RuntimeWarning, match="1 arrivals unsubmitted"):
+        eng.run([_Req(uid=0, arrival_tick=50)], max_ticks=3)
+
+
+# ------------------------------------------------------- launch containment
+
+
+def test_slot_attributed_fault_quarantines_only_victim():
+    eng = _PoisonEngine(2, poison={2, 4}, launch_retries=1)
+    done = eng.run([_StreamReq(uid=i, length=2) for i in range(6)])
+    assert {r.uid for r in done} == {0, 1, 3, 5}
+    assert {r.uid for r in eng.failed} == {2, 4}
+    assert all(r.failure == "launch" for r in eng.failed)
+    # each poisoned cohort: 1 fault + 1 retry = 2 raises per poisoned uid
+    assert eng.stats["launch_faults"] == 4
+    for r in done:  # survivors' slots stayed clean through the retries
+        assert r.observed == list(range(1, r.length + 1))
+
+
+def test_anonymous_fault_quarantines_cohort_and_recovers():
+    eng = _AnonFaultEngine(2, bad_ticks={1}, launch_retries=2)
+    done = eng.run([_Req(uid=i) for i in range(4)])
+    # tick 1's cohort (uids 0, 1) is quarantined whole — the launch
+    # cannot say which occupant poisoned it; the next wave serves fine
+    assert {r.uid for r in eng.failed} == {0, 1}
+    assert {r.uid for r in done} == {2, 3}
+    assert eng.stats["launch_faults"] == 3  # 1 fault + 2 retries
+
+
+def test_transient_fault_cleared_by_retry():
+    class _Transient(_OneTickEngine):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.raises_left = 1
+
+        def _launch(self, active):
+            if self.raises_left:
+                self.raises_left -= 1
+                raise RuntimeError("transient")
+            return None
+
+    eng = _Transient(2, launch_retries=2)
+    done = eng.run([_Req(uid=i) for i in range(2)])
+    assert {r.uid for r in done} == {0, 1}  # retry absorbed the fault
+    assert eng.failed == []
+    assert eng.stats["launch_faults"] == 1
+
+
+# ------------------------------------------------------------- NaN/Inf guard
+
+
+def test_nan_guard_fails_one_request_not_the_engine():
+    inj = FaultInjector(FaultPlan(nan_ticks=(1,)))
+    eng = _FloatEngine(2, faults=inj)
+    done = eng.run([_Req(uid=i) for i in range(4)])
+    assert len(done) == 3 and len(eng.failed) == 1
+    assert eng.failed[0].failure == "nonfinite"
+    assert eng.failed[0].uid in {0, 1}  # tick 1's cohort
+    assert inj.counts["nan"] == 1
+
+
+def test_serve_engine_validate_rejects_corrupted_token():
+    nxt, adv = np.array([3, -1]), np.array([1, 1])
+    assert ServeEngine._validate(None, 0, None, (nxt, adv))
+    assert not ServeEngine._validate(None, 1, None, (nxt, adv))
+
+
+# ------------------------------------------------- injector free when off
+
+
+def test_zero_fault_injector_is_bitwise_free_on_schedule():
+    """The same traffic through identical engines, one with a zero-rate
+    injector attached: schedules, ledgers, and stats must be identical —
+    the fault layer costs nothing when it injects nothing."""
+    def run_one(faults):
+        eng = _StatefulStreamEngine(2, max_queue=2, evict="deadline",
+                                    max_serve_ticks=10, faults=faults)
+        rng = np.random.default_rng(7)
+        reqs = [_StreamReq(uid=i, length=int(rng.integers(1, 5)),
+                           arrival_tick=int(rng.integers(0, 4)),
+                           deadline_tick=20 + i, priority=i % 3)
+                for i in range(9)]
+        done = eng.run(reqs)
+        return eng, [(r.uid, r.submitted_tick, r.served_tick,
+                      r.finished_tick, r.serve_ticks, tuple(r.observed))
+                     for r in done]
+
+    bare, ledger_bare = run_one(None)
+    inj = FaultInjector(FaultPlan())
+    wrapped, ledger_wrapped = run_one(inj)
+    assert ledger_bare == ledger_wrapped
+    assert [r.uid for r in bare.evicted] == [r.uid for r in wrapped.evicted]
+    for k in ("launches", "served", "evictions", "failures",
+              "watchdog_evictions", "launch_faults", "slot_ticks",
+              "busy_slot_ticks"):
+        assert bare.stats[k] == wrapped.stats[k], k
+    assert inj.counts == {"launch": 0, "nan": 0, "slow": 0, "stuck": 0}
+    assert inj.poisoned_uids == set()
+
+
+CFG = None  # initialized lazily by _vision_model
+
+
+def _vision_model():
+    global CFG
+    from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+
+    if CFG is None:
+        CFG = MNV2Config(variant="p2m", image_size=20, width=0.25,
+                         head_channels=16)
+        _vision_model.cache = init_mnv2(jax.random.PRNGKey(0), CFG)
+    return _vision_model.cache
+
+
+def _images(n, seed=0):
+    from repro.data import SyntheticVWW
+
+    return SyntheticVWW(image_size=20, batch=n, seed=seed).batch_at(0)["images"]
+
+
+def test_zero_fault_injector_is_bitwise_free_on_real_outputs():
+    """Real vision engine, same traffic with and without a zero-rate
+    injector: per-request probability rows are bit-identical."""
+    params, bn = _vision_model()
+    imgs = _images(5)
+
+    def run_one(faults):
+        eng = VisionEngine(params, bn, CFG, max_batch=2, faults=faults)
+        return eng.run([VisionRequest(uid=i, image=imgs[i])
+                        for i in range(5)])
+
+    bare = run_one(None)
+    wrapped = run_one(FaultInjector(FaultPlan()))
+    for a, b in zip(bare, wrapped):
+        assert a.uid == b.uid and a.label == b.label
+        np.testing.assert_array_equal(a.probs, b.probs)
+
+
+# --------------------------------------------------------- degradation ladder
+
+
+def test_vision_engine_degrades_to_patches_and_keeps_serving():
+    params, bn = _vision_model()
+    imgs = _images(4)
+    inj = FaultInjector(FaultPlan(launch_error_ticks=(1,)))
+    eng = VisionEngine(params, bn, CFG, max_batch=1, degrade_after=1,
+                       launch_retries=0, faults=inj)
+    done = eng.run([VisionRequest(uid=i, image=imgs[i]) for i in range(4)])
+    assert eng.degraded == "patches"
+    assert eng.health()["degraded"] == "patches"
+    # tick 1's occupant was quarantined; the rest served on the
+    # reference conv with valid probabilities
+    assert {r.uid for r in eng.failed} == {0}
+    assert {r.uid for r in done} == {1, 2, 3}
+    for r in done:
+        assert np.isfinite(r.probs).all() and r.label is not None
+
+
+def test_stream_engine_gate_drops_to_dense_on_poisoned_cache():
+    """Corrupt a stream's cached stem mid-flight: the on-device check
+    forces a re-run (finite outputs), the gate drops to dense, and the
+    remaining frames all re-run — the ledger meters the recovery."""
+    import jax.numpy as jnp
+
+    from repro.models.mobilenetv2 import head_out_channels
+    from repro.video import (DetectConfig, StreamEngine, StreamRequest,
+                             SyntheticVideo, init_detect_head)
+
+    params, bn = _vision_model()
+    det = init_detect_head(jax.random.PRNGKey(2), head_out_channels(CFG),
+                           DetectConfig())
+    eng = StreamEngine(params, bn, CFG, det, max_streams=1)
+    frames = SyntheticVideo(image_size=20, n_frames=6, hold=6,
+                            seed=0).frames()  # fully redundant: gate skips
+    req = StreamRequest(uid=0, frames=frames)
+    eng.submit(req)
+    eng.step()  # frame 0: rerun (no reference yet), cache filled
+    eng.step()  # frame 1: skipped (bit-identical)
+    assert req.ledger.rerun_frames == 1
+    # poison the cached stem — a corrupted analog activation in state
+    eng._cached_stem = eng._cached_stem.at[0, 0, 0, 0].set(jnp.nan)
+    eng.step()  # frame 2: forced re-run, gate disabled
+    assert eng._gates[0].disabled
+    assert eng._gate_faults == 1
+    assert eng.health()["gate_faults"] == 1
+    done = eng.run()
+    assert [r.uid for r in done] == [0]
+    # frames 2..5 all re-ran (dense after the fault); only frame 1 skipped
+    assert req.ledger.rerun_frames == 5
+    for boxes, scores in req.frame_outputs:
+        assert np.isfinite(boxes).all() and np.isfinite(scores).all()
+
+
+def test_delta_gate_disable_and_self_validation():
+    from repro.core.bandwidth import FirstLayerGeom
+    from repro.video.delta import DeltaGate, DeltaGateConfig
+
+    geom = FirstLayerGeom(image_size=8, kernel=4, padding=0, stride=4,
+                          out_channels=4, out_bits=8)
+    frame = np.zeros((8, 8, 3), np.float32)
+    gate = DeltaGate(DeltaGateConfig(threshold=1.0), geom)
+    assert gate.should_rerun(frame)  # no reference yet
+    gate.observe(frame, True)
+    assert not gate.should_rerun(frame)  # identical + huge threshold
+    gate.disable()
+    assert gate.should_rerun(frame)  # disabled ⇒ dense forever
+
+    # a reference that stopped matching the stream self-disables
+    g2 = DeltaGate(DeltaGateConfig(threshold=1.0), geom)
+    g2.observe(frame, True)
+    assert g2.should_rerun(np.zeros((4, 4, 3), np.float32))
+    assert g2.disabled
+
+    # a non-finite reference self-disables
+    g3 = DeltaGate(DeltaGateConfig(threshold=1.0), geom)
+    g3.observe(np.full((8, 8, 3), np.nan, np.float32), True)
+    assert g3.should_rerun(frame)
+    assert g3.disabled
+
+
+# ------------------------------------------------------ halt + front door
+
+
+def test_halt_fails_all_traffic_visibly():
+    eng = _StatefulStreamEngine(1)
+    eng.submit(_StreamReq(uid=0, length=5))
+    eng.submit(_StreamReq(uid=1, length=1))
+    eng.step()
+    eng.halt("test outage")
+    assert not eng.busy()
+    assert {r.uid for r in eng.failed} == {0, 1}
+    assert all(r.failure == "halt:test outage" for r in eng.failed)
+    assert eng.queue == [] and all(s is None for s in eng.slots)
+    assert eng.submit(_StreamReq(uid=2, length=1)) == REJECTED_HALTED
+    assert eng.step() == []
+    assert eng.health()["halted"] == "test outage"
+
+
+def test_front_door_isolates_failed_engine():
+    """One engine's step blowing past launch containment (an adapter
+    bug) halts that engine; the other keeps serving, submissions to the
+    dead one bounce, and the health report names the outage."""
+    good, bad = _OneTickEngine(2), _BadAbsorbEngine(2)
+    door = FrontDoor(good=good, bad=bad)
+    reqs = ([_Req(uid=i) for i in range(4)]
+            + [_ReqB(uid=10 + i) for i in range(3)])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        done = door.run(reqs)
+    assert [n for n, _ in done] == ["good"] * 4
+    assert "bad" in door.down and "absorb bug" in door.down["bad"]
+    assert bad.halted is not None
+    assert {r.uid for r in bad.failed} == {10, 11, 12}
+    assert door.submit(_ReqB(uid=13)) == REJECTED_HALTED
+    assert door.submit(_Req(uid=4)) == ADMITTED
+    assert [r.uid for _, r in door.run()] == [0, 1, 2, 3, 4]
+    health = door.health()
+    assert health["down"] == door.down
+    assert health["engines"]["bad"]["halted"] is not None
+    assert health["engines"]["good"]["halted"] is None
+
+
+def test_front_door_chaos_smoke_never_deadlocks():
+    """Dummy-adapter chaos at SMOKE_PLAN rates through the front door:
+    the replay always drains within the tick budget and every request is
+    accounted exactly once — the acceptance no-deadlock property at
+    scheduler scale (the real-model version runs in
+    benchmarks/bench_serve_chaos.py, gated by scripts/bench_gate.py)."""
+    rng = np.random.default_rng(0)
+    a = _OneTickEngine(2, max_queue=4, evict="deadline",
+                       admission="deadline", max_serve_ticks=6,
+                       launch_retries=1,
+                       faults=FaultInjector(SMOKE_PLAN))
+    b = _StatefulStreamEngine(
+        2, max_queue=4, evict="deadline", admission="deadline",
+        max_serve_ticks=8, launch_retries=1,
+        faults=FaultInjector(dataclasses.replace(SMOKE_PLAN, seed=1)))
+    door = FrontDoor(a=a, b=b)
+    reqs = [_Req(uid=i, arrival_tick=int(rng.integers(0, 6)),
+                 deadline_tick=int(rng.integers(10, 40)))
+            for i in range(12)]
+    reqs += [_StreamReq(uid=100 + i, length=int(rng.integers(1, 5)),
+                        arrival_tick=int(rng.integers(0, 6)),
+                        deadline_tick=int(rng.integers(20, 60)))
+             for i in range(12)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # undrained replay ⇒ loud failure
+        door.run(reqs, max_ticks=400)
+    for eng in (a, b):
+        assert all(s is None for s in eng.slots)
+        seen = [r.uid for r in
+                eng.completed + eng.failed + eng.evicted + eng.rejected]
+        assert sorted(seen) == sorted(set(seen))  # exactly-once accounting
+    total = sum(len(e.completed) + len(e.failed) + len(e.evicted)
+                + len(e.rejected) for e in (a, b))
+    assert total == 24
+    assert len(door.completed) > 0  # chaos never starved the floor
+
+
+def test_serve_engine_contains_injected_corruption_end_to_end():
+    """Real LM engine under an injected corrupted decode row: the -1
+    token (the int analogue of NaN) fails its own request; the cohort's
+    survivors finish with valid outputs."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models.families import get_family
+
+    cfg = get_smoke_config("llama3.2-1b").replace(dtype=jnp.float32)
+    params, _ = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    inj = FaultInjector(FaultPlan(nan_ticks=(2,)))
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=16, faults=inj)
+    done = eng.run([Request(uid=i, prompt=[1 + i], max_new_tokens=2)
+                    for i in range(3)])
+    assert len(eng.failed) == 1 and eng.failed[0].failure == "nonfinite"
+    assert {r.uid for r in done} == set(range(3)) - {eng.failed[0].uid}
+    for r in done:
+        assert len(r.output) == 2 and all(t >= 0 for t in r.output)
+
+
+# ----------------------------- multi-device lane (scripts/ci.sh re-runs
+# this test under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (CI multi-device lane)")
+
+
+@needs8
+def test_sharded_engine_contains_faults_like_single_device():
+    """Fault containment under a data mesh: the sharded vision engine
+    quarantines the same requests and completes the same survivors as
+    the single-device engine under an identical injection plan —
+    containment is scheduler semantics, independent of the launch's
+    device topology (DESIGN.md §10)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    params, bn = _vision_model()
+    imgs = _images(8)
+    plan = FaultPlan(launch_error_ticks=(1,), nan_ticks=(3,))
+
+    def run_one(mesh):
+        eng = VisionEngine(params, bn, CFG, max_batch=8, mesh=mesh,
+                           launch_retries=0, degrade_after=100,
+                           faults=FaultInjector(plan))
+        done = eng.run([VisionRequest(uid=i, image=imgs[i],
+                                      arrival_tick=i // 4)
+                        for i in range(8)])
+        return eng, done
+
+    single, d1 = run_one(None)
+    sharded, d8 = run_one(make_debug_mesh(8))
+    assert [r.uid for r in d1] == [r.uid for r in d8]
+    assert ([(r.uid, r.failure) for r in single.failed]
+            == [(r.uid, r.failure) for r in sharded.failed])
+    assert single.stats["launch_faults"] == sharded.stats["launch_faults"]
+    for a, b in zip(d1, d8):
+        np.testing.assert_allclose(b.probs, a.probs, rtol=1e-4, atol=1e-3)

@@ -55,6 +55,54 @@ def test_synthetic_video_hold_gives_bit_identical_frames():
     assert not np.array_equal(fn[0], fn[1])
 
 
+def test_synthetic_video_noise_breaks_every_hold_and_replays():
+    """noise > 0 is per-frame (keyed on (seed, t)): every consecutive
+    pair differs — including *within* hold groups, where the clean
+    stream is bit-identical — yet the stream replays deterministically,
+    stays in [0, 1], and leaves the ground truth untouched."""
+    mk = lambda: SyntheticVideo(image_size=24, n_frames=8, hold=4, seed=3,
+                                noise=0.05)
+    fa, fb = mk().frames(), mk().frames()
+    np.testing.assert_array_equal(fa, fb)  # deterministic replay
+    for t in range(7):
+        assert not np.array_equal(fa[t], fa[t + 1]), f"hold at t={t}"
+    assert (fa >= 0.0).all() and (fa <= 1.0).all()
+    # ground truth is noise-free: same boxes/ids as the clean stream
+    clean = SyntheticVideo(image_size=24, n_frames=8, hold=4, seed=3)
+    np.testing.assert_array_equal(mk().gt_boxes(), clean.gt_boxes())
+    # distinct seeds draw distinct noise over the same layout seed space
+    other = SyntheticVideo(image_size=24, n_frames=8, hold=4, seed=4,
+                           noise=0.05)
+    assert not np.array_equal(fa[0], other.frames()[0])
+
+
+def test_synthetic_video_noise_defeats_lossless_gate():
+    """With per-frame noise a threshold-0 ('lossless') delta gate never
+    skips — the bit-level redundancy it exploits is gone — while a
+    tolerant threshold above the noise floor still gates within holds."""
+    from repro.core.bandwidth import FirstLayerGeom
+    from repro.video.delta import DeltaGate, DeltaGateConfig
+
+    geom = FirstLayerGeom(image_size=24, kernel=4, padding=0, stride=4,
+                          out_channels=4, out_bits=8)
+
+    def reruns(threshold, noise):
+        v = SyntheticVideo(image_size=24, n_frames=6, hold=3, seed=0,
+                           noise=noise)
+        gate = DeltaGate(DeltaGateConfig(threshold=threshold), geom)
+        out = []
+        for f in v.frames():
+            r = gate.should_rerun(f)
+            gate.observe(f, r)
+            out.append(r)
+        return out
+
+    assert reruns(0.0, 0.02) == [True] * 6  # noise kills lossless gating
+    assert reruns(0.0, 0.0) == [True, False, False, True, False, False]
+    tolerant = reruns(0.2, 0.02)
+    assert tolerant[0] and not all(tolerant)  # above-noise threshold gates
+
+
 def test_synthetic_video_objects_move_and_stay_inside():
     v = SyntheticVideo(image_size=32, n_frames=20, hold=1, seed=1)
     gt = v.gt_boxes()
