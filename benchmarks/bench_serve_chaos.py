@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from benchmarks.traces import ModalityMix, build_mixed_trace
 from repro.configs import get_smoke_config
 from repro.launch.serve import FrontDoor
 from repro.models.families import get_family
@@ -86,37 +87,33 @@ def _init_models(image_size: int = 40) -> _Models:
 
 
 def _traffic(m: _Models, seed: int = 0) -> list:
-    """The seeded mixed trace: arrivals, deadlines, priorities."""
-    rng = np.random.default_rng(seed)
+    """The seeded mixed trace: arrivals, deadlines, priorities — built
+    by the shared `benchmarks.traces` generator (the saturation bench
+    replays the same shape at scale with synthetic payloads).  The mix
+    and constructors reproduce the original hand-rolled trace
+    bit-identically, so the gated chaos floors are untouched."""
     size = m.vcfg.image_size
-    reqs: list = []
-    for uid in range(N_LM):
-        arrival = uid // 2
-        reqs.append(Request(
+    mix = [
+        ModalityMix("lm", N_LM, rate=2.0, deadline_base=60,
+                    deadline_jitter=20),
+        ModalityMix("vision", N_VISION, rate=3.0, deadline_base=16,
+                    deadline_jitter=8, uid_base=1000),
+        ModalityMix("stream", N_STREAM, rate=0.5, deadline_base=50,
+                    deadline_jitter=16, uid_base=2000),
+    ]
+    make = {
+        "lm": lambda uid, i, arrival, rng: Request(
             uid=uid,
             prompt=rng.integers(0, m.lm_cfg.vocab,
                                 rng.integers(4, 9)).tolist(),
-            max_new_tokens=6, arrival_tick=arrival,
-            deadline_tick=arrival + 60 + int(rng.integers(0, 20)),
-            priority=int(rng.integers(0, 3))))
-    for uid in range(N_VISION):
-        arrival = uid // 3
-        reqs.append(VisionRequest(
-            uid=1000 + uid,
-            image=rng.random((size, size, 3)).astype(np.float32),
-            arrival_tick=arrival,
-            deadline_tick=arrival + 16 + int(rng.integers(0, 8)),
-            priority=int(rng.integers(0, 3))))
-    for uid in range(N_STREAM):
-        arrival = 2 * uid
-        reqs.append(StreamRequest(
-            uid=2000 + uid,
-            frames=SyntheticVideo(image_size=size, n_frames=6,
-                                  seed=uid).frames(),
-            arrival_tick=arrival,
-            deadline_tick=arrival + 50 + int(rng.integers(0, 16)),
-            priority=int(rng.integers(0, 3))))
-    return reqs
+            max_new_tokens=6),
+        "vision": lambda uid, i, arrival, rng: VisionRequest(
+            uid=uid, image=rng.random((size, size, 3)).astype(np.float32)),
+        "stream": lambda uid, i, arrival, rng: StreamRequest(
+            uid=uid, frames=SyntheticVideo(image_size=size, n_frames=6,
+                                           seed=i).frames()),
+    }
+    return build_mixed_trace(mix, make, seed=seed)
 
 
 def _build_door(m: _Models, plan: FaultPlan | None):

@@ -24,6 +24,7 @@ def main() -> None:
         bench_fig7_quant,
         bench_p2m_kernel,
         bench_serve_chaos,
+        bench_serve_saturation,
         bench_train_serve,
         roofline,
     )
@@ -31,10 +32,12 @@ def main() -> None:
     if smoke:
         # Serving rows first: bench_p2m_kernel.run writes the smoke JSON
         # (prefix p2m_) that scripts/bench_gate.py reads; the sharded
-        # vision-serving, video-stream, and chaos-replay gates ride in it.
+        # vision-serving, video-stream, chaos-replay, and pool-saturation
+        # gates ride in it.
         bench_train_serve.run_vision_serve(smoke=True)
         bench_train_serve.run_video_stream(smoke=True)
         bench_serve_chaos.run(smoke=True)
+        bench_serve_saturation.run(smoke=True)
         bench_p2m_kernel.run(smoke=True)
         return
     bench_paper_tables.run()
@@ -43,6 +46,7 @@ def main() -> None:
     bench_train_serve.run()
     bench_train_serve.run_video_stream()
     bench_serve_chaos.run()
+    bench_serve_saturation.run()
     roofline.run()
 
 

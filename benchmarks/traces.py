@@ -1,0 +1,70 @@
+"""Seeded mixed-traffic trace builder shared by the serving benches.
+
+One generator for the mixed LM/vision/stream replay traces that
+`bench_serve_chaos.py` (fault injection) and `bench_serve_saturation.py`
+(replica-pool scaling) both drive through the front door — the request
+counts, arrival rates, deadline windows, and seed are parameters; the
+payload constructors are supplied by the caller (real model inputs for
+the chaos replay, synthetic slot-residency descriptors for the
+saturation sweep).
+
+Determinism contract: all stochastic choices draw from one
+`np.random.default_rng(seed)` in a fixed order — per request: payload
+draws first (inside the caller's constructor), then the deadline
+jitter, then the priority — so a trace is a pure function of
+``(specs, make, seed)`` and replays bit-identically on any machine.
+The arrival pattern is ``arrival_tick = floor(i / rate)`` with ``rate``
+in requests per front-door tick (``rate=0.5`` ⇒ one arrival every
+other tick), matching the hand-rolled patterns the benches previously
+kept separately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModalityMix:
+    """One modality's share of a mixed trace.
+
+    ``uid_base`` keeps uid ranges disjoint across modalities so
+    injector ``poisoned_uids`` sets and completion ledgers index the
+    whole trace unambiguously.  ``deadline_tick = arrival +
+    deadline_base + U[0, deadline_jitter)`` when the builder runs with
+    ``deadlines=True``; priorities draw uniformly from [0, 3).
+    """
+
+    name: str
+    n: int
+    rate: float  # arrivals per front-door tick
+    deadline_base: int = 0
+    deadline_jitter: int = 1
+    uid_base: int = 0
+
+
+def build_mixed_trace(mix: Sequence[ModalityMix],
+                      make: dict[str, Callable],
+                      seed: int = 0,
+                      deadlines: bool = True) -> list:
+    """Build the seeded trace: for each modality (in ``mix`` order) and
+    local index ``i``, call ``make[name](uid, i, arrival, rng)`` to
+    construct the request (payload draws come off the shared ``rng``),
+    then stamp ``arrival_tick`` and — with ``deadlines`` — the seeded
+    deadline and priority.  Returns the flat request list in
+    construction order (the `drive` replay sorts by arrival itself)."""
+    rng = np.random.default_rng(seed)
+    reqs: list = []
+    for m in mix:
+        for i in range(m.n):
+            arrival = int(i // m.rate)
+            req = make[m.name](m.uid_base + i, i, arrival, rng)
+            req.arrival_tick = arrival
+            if deadlines:
+                req.deadline_tick = (arrival + m.deadline_base
+                                     + int(rng.integers(0, m.deadline_jitter)))
+                req.priority = int(rng.integers(0, 3))
+            reqs.append(req)
+    return reqs

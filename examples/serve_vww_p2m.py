@@ -11,9 +11,17 @@ FrontDoor, demonstrating mixed-modality routing and merged completion.
 With --mesh, the vision microbatch is sharded over the data mesh built
 from all visible devices (run under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 to see 8-way DP on
-CPU).
+CPU).  With --replicas N, the vision side becomes an N-replica
+`ReplicaPool` behind least-loaded dispatch (DESIGN.md §11) — combined
+with --mesh each replica gets its own disjoint submesh, i.e.
+data-parallel *within* a replica, replica-parallel across the pool —
+and --lm-tick-cost C makes the front door event-driven: the LM engine
+fires once per C door ticks while vision fires every tick.
 
 Run:  PYTHONPATH=src python examples/serve_vww_p2m.py --requests 24
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_vww_p2m.py --requests 24 \
+          --mesh --replicas 2 --lm-tick-cost 4
 """
 import argparse
 import pathlib
@@ -28,11 +36,17 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.p2m_vww import SERVE_MAX_BATCH, SERVE_MAX_QUEUE
 from repro.data import SyntheticVWW
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.mesh import make_debug_mesh, make_submeshes
 from repro.launch.serve import FrontDoor
+from repro.serving import (
+    ReplicaPool,
+    Request,
+    ServeEngine,
+    VisionEngine,
+    VisionRequest,
+)
 from repro.models.families import get_family
 from repro.models.mobilenetv2 import MNV2Config, init_mnv2
-from repro.serving import Request, ServeEngine, VisionEngine, VisionRequest
 
 
 def main():
@@ -44,6 +58,12 @@ def main():
     ap.add_argument("--max-queue", type=int, default=SERVE_MAX_QUEUE)
     ap.add_argument("--mesh", action="store_true",
                     help="shard the vision microbatch over all devices")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="vision replicas in a least-loaded ReplicaPool "
+                         "(with --mesh: one disjoint submesh per replica)")
+    ap.add_argument("--lm-tick-cost", type=int, default=1,
+                    help="front-door ticks per LM engine tick (>1 makes "
+                         "the door event-driven, DESIGN.md §11)")
     args = ap.parse_args()
 
     cfg = MNV2Config(variant="p2m", image_size=args.image_size, width=0.25,
@@ -52,9 +72,16 @@ def main():
     batch = SyntheticVWW(image_size=args.image_size,
                          batch=args.requests).batch_at(0)
 
-    mesh = make_debug_mesh() if args.mesh else None
-    engine = VisionEngine(params, bn, cfg, max_batch=args.max_batch,
-                          max_queue=args.max_queue, mesh=mesh)
+    if args.replicas > 1:
+        meshes = (make_submeshes(args.replicas) if args.mesh
+                  else [None] * args.replicas)
+        engine = ReplicaPool(*(
+            VisionEngine(params, bn, cfg, max_batch=args.max_batch,
+                         max_queue=args.max_queue, mesh=m) for m in meshes))
+    else:
+        mesh = make_debug_mesh() if args.mesh else None
+        engine = VisionEngine(params, bn, cfg, max_batch=args.max_batch,
+                              max_queue=args.max_queue, mesh=mesh)
 
     # bursty arrivals: clumps of frames every few ticks
     rng = np.random.default_rng(0)
@@ -70,7 +97,7 @@ def main():
     lm_fam = get_family(lm_cfg)
     lm_params, _ = lm_fam.init(jax.random.PRNGKey(1), lm_cfg)
     lm = ServeEngine(lm_params, lm_cfg, max_batch=2, max_len=64,
-                     prefill_chunk=4)
+                     prefill_chunk=4, tick_cost=args.lm_tick_cost)
     for uid in range(args.lm_requests):
         prompt = rng.integers(0, lm_cfg.vocab, 6).tolist()
         reqs.append(Request(uid=1000 + uid, prompt=prompt, max_new_tokens=8,
@@ -82,7 +109,10 @@ def main():
     lm_done = [r for n, r in merged if n == "lm"]
 
     correct = sum(r.label == int(batch["labels"][r.uid]) for r in done)
-    dev = f"{len(mesh.devices.flat)}-device mesh" if mesh else "single device"
+    n_dev = len(jax.devices()) if args.mesh else 1
+    dev = (f"{args.replicas}x {n_dev // args.replicas}-device replicas"
+           if args.replicas > 1 else
+           f"{n_dev}-device mesh" if args.mesh else "single device")
     print(f"served {len(done)}/{args.requests} frames on {dev} "
           f"(accuracy vs labels {correct / len(done):.2f} — untrained net) "
           f"+ {len(lm_done)} LM requests")

@@ -77,6 +77,23 @@ GATES: dict[str, list[tuple[str | None, str, float]]] = {
     "p2m_serve_chaos_smoke":
         [(None, "completion_rate", 0.7),
          (None, "nonfault_completion_rate", 0.95)],
+    # Replica-pool saturation (benchmarks/bench_serve_saturation.py,
+    # DESIGN.md §11): synthetic cost-model engines — every metric counts
+    # requests and ticks, never wall-clock, so the floors are exact
+    # machine-independent guards.  The measured replay puts the 2-replica
+    # door at 1.76x the 1-replica saturation throughput and the
+    # 4-replica door at 3.30x; the floors sit under those deterministic
+    # values, and a dispatch regression (a pool that stopped balancing,
+    # an event loop that starves a cadence) drops them far below.  The
+    # equivalence row is a hard bit-identity check: with equal
+    # tick_costs, the event-driven door over 1-replica pools must replay
+    # the lockstep reference door's completion ledgers exactly.
+    "p2m_serve_saturation_pool2_smoke":
+        [(None, "speedup_vs_pool1", 1.6)],
+    "p2m_serve_saturation_pool4_smoke":
+        [(None, "speedup_vs_pool1", 2.5)],
+    "p2m_serve_saturation_equiv_smoke":
+        [(None, "lockstep_equivalent", 1.0)],
 }
 
 # Metrics that compare a sharded path against single-device: meaningless

@@ -23,6 +23,25 @@ def make_debug_mesh(n_devices: int | None = None, model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_submeshes(n: int, *, model: int = 1, devices=None):
+    """Split the visible devices into ``n`` disjoint ("data", "model")
+    submeshes — one per replica of a `serving.pool.ReplicaPool`, so a
+    pool of sharded engines gets data-parallelism *within* each replica
+    and replica-parallelism across them (DESIGN.md §11).  Contiguous
+    device slices: replica boundaries line up with physical locality on
+    real topologies."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(devices if devices is not None else jax.devices())
+    assert len(devs) % n == 0, (len(devs), n)
+    per = len(devs) // n
+    assert per % model == 0, (per, model)
+    return [Mesh(np.asarray(devs[i * per:(i + 1) * per])
+                 .reshape(per // model, model), ("data", "model"))
+            for i in range(n)]
+
+
 # TPU v5e per-chip constants (roofline denominators).
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s

@@ -14,6 +14,7 @@ Mixed LM + vision traffic through the front door:
 from __future__ import annotations
 
 import argparse
+import heapq
 import time
 from typing import Sequence
 
@@ -29,32 +30,64 @@ from repro.serving.scheduler import drive
 
 class FrontDoor:
     """Multi-engine front door: one submission surface over per-modality
-    engines (DESIGN.md §8).
+    engines and replica pools (DESIGN.md §8, §11).
 
     Requests route by each engine's declared ``request_type``
     (``Request`` → the LM engine, ``VisionRequest`` → the vision engine,
     ``StreamRequest`` → the multi-tick video stream engine — any
-    `SlotEngine` adapter that declares one plugs in without touching the
-    router); each engine keeps its own clock, queue policy,
-    and latency ledger, while the front door drives them in lockstep —
-    one front-door tick steps every registered engine (idle engines just
-    advance their clock, see ``step``) — and merges
-    their completion streams into a single list in completion order
-    (``(name, request)`` pairs; ties within a tick resolve in engine
-    registration order).
+    `SlotEngine` adapter or `serving.pool.ReplicaPool` that declares one
+    plugs in without touching the router); each engine keeps its own
+    clock, queue policy, and latency ledger, and completion streams
+    merge into a single list in completion order (``(name, request)``
+    pairs; ties within a tick resolve in engine registration order).
+
+    **Event-driven cadences (DESIGN.md §11):** each engine declares a
+    ``tick_cost`` — one engine tick costs that many ticks of front-door
+    time (LM prefill is expensive, a vision microbatch cheap, a stream
+    frame cheapest).  The door advances a dense virtual clock one tick
+    per ``step`` and fires engines off a priority queue of ready events:
+    an engine with ``tick_cost=c`` first fires at door tick ``c`` and
+    re-arms ``c`` ticks later each time, so cheap engines tick many
+    times while an expensive one ticks once and a slow modality never
+    stalls a fast one.  With every ``tick_cost`` equal the schedule is
+    *bit-identical* to the legacy lockstep door (``lockstep=True`` keeps
+    that path alive as the equivalence reference, gated by
+    ``benchmarks/bench_serve_saturation.py``).
 
     ``arrival_tick`` on submitted-via-``run`` requests is interpreted on
-    the *front door's* clock, so a mixed trace replays against one
-    timeline even though the engines tick independently.
+    the *front door's* clock, and every tick-denominated latency figure
+    the door reports is converted engine ticks → front-door ticks here,
+    once (``tick_cost ×``, any ``*_ticks`` key at any depth) — adapters
+    never convert.
     """
 
-    def __init__(self, **engines):
+    def __init__(self, lockstep: bool = False, **engines):
         if not engines:
             raise ValueError("FrontDoor needs at least one engine")
         self.engines = engines
+        self.lockstep = lockstep
         self.tick = 0
         self.completed: list[tuple[str, object]] = []
         self.down: dict[str, str] = {}  # engine name -> failure reason
+        self._order = list(engines)  # registration order = tie-break order
+        self._costs = {}
+        for name, engine in engines.items():
+            cost = getattr(engine, "tick_cost", 1)
+            if not (isinstance(cost, int) and cost >= 1):
+                raise ValueError(f"engine {name!r} declares tick_cost "
+                                 f"{cost!r}; need an int >= 1")
+            if lockstep and cost != 1:
+                raise ValueError(f"lockstep door requires tick_cost=1 "
+                                 f"everywhere; engine {name!r} declares "
+                                 f"{cost}")
+            self._costs[name] = cost
+        # Ready-event queue: (due door-tick, registration index).  An
+        # engine first fires once its cost is paid, i.e. at tick ==
+        # tick_cost; heap order + index tie-break keeps the schedule
+        # deterministic.
+        self._due = [(self._costs[name], ix)
+                     for ix, name in enumerate(self._order)]
+        heapq.heapify(self._due)
 
     def _route(self, req) -> str:
         # Route by the request type each engine's adapter declares.
@@ -62,7 +95,12 @@ class FrontDoor:
             want = getattr(engine, "request_type", None)
             if want is not None and isinstance(req, want):
                 return name
-        raise TypeError(f"no engine registered for {type(req).__name__}")
+        registered = ", ".join(
+            f"{name}={getattr(e, 'request_type', None).__name__}"
+            for name, e in self.engines.items()
+            if getattr(e, "request_type", None) is not None) or "none"
+        raise TypeError(f"no engine registered for {type(req).__name__}; "
+                        f"registered request types: {registered}")
 
     def submit(self, req) -> str:
         """Route and submit; returns the engine's admission status
@@ -74,29 +112,49 @@ class FrontDoor:
     def busy(self) -> bool:
         return any(e.busy() for e in self.engines.values())
 
-    def step(self) -> list[tuple[str, object]]:
-        """One front-door tick: step every engine in lockstep (idle
-        engines just advance their clock — the core skips the launch —
-        so engine ticks stay aligned with the front-door timeline and
-        per-engine latency counters read on one clock).  Returns this
-        tick's merged completions as ``(engine name, request)``.
+    def _step_engine(self, name: str, out: list) -> bool:
+        """Step one engine inside the isolation boundary; returns False
+        when the engine was halted by this step.
 
         Fault containment (DESIGN.md §10): an engine whose ``step``
         escapes its own containment (a bug past the scheduler's launch
         quarantine) is *halted*, not propagated — its queued and running
         requests land on its ``failed`` ledger, it bounces future
         submissions, and the other engines keep serving."""
+        engine = self.engines[name]
+        try:
+            out.extend((name, r) for r in engine.step())
+            return True
+        except Exception as exc:  # noqa: BLE001 — isolation boundary
+            reason = f"{type(exc).__name__}: {exc}"
+            self.down[name] = reason
+            engine.halt(reason)
+            return False
+
+    def step(self) -> list[tuple[str, object]]:
+        """One front-door tick: advance the virtual clock by one and
+        fire every engine whose ready event is due (all of them, in the
+        lockstep reference path).  A fired engine re-arms ``tick_cost``
+        ticks out; a halted engine leaves the event queue.  Returns this
+        tick's merged completions as ``(engine name, request)``,
+        registration-ordered within the tick."""
         self.tick += 1
-        out = []
-        for name, engine in self.engines.items():
+        out: list[tuple[str, object]] = []
+        if self.lockstep:
+            for name in self._order:
+                if name not in self.down:
+                    self._step_engine(name, out)
+            self.completed.extend(out)
+            return out
+        fired: list[int] = []
+        while self._due and self._due[0][0] <= self.tick:
+            fired.append(heapq.heappop(self._due)[1])
+        for ix in sorted(fired):  # registration order within the tick
+            name = self._order[ix]
             if name in self.down:
                 continue
-            try:
-                out.extend((name, r) for r in engine.step())
-            except Exception as exc:  # noqa: BLE001 — isolation boundary
-                reason = f"{type(exc).__name__}: {exc}"
-                self.down[name] = reason
-                engine.halt(reason)
+            if self._step_engine(name, out):
+                heapq.heappush(self._due, (self.tick + self._costs[name], ix))
         self.completed.extend(out)
         return out
 
@@ -107,18 +165,52 @@ class FrontDoor:
         drive(self, requests, max_ticks, on_undrained=on_undrained)
         return self.completed
 
+    def _on_door_clock(self, name: str, obj):
+        """Convert an engine's tick-denominated report onto the shared
+        front-door clock: every ``*_ticks`` key, at any depth (replica
+        pools nest per-replica summaries), scales by the engine's
+        ``tick_cost``.  This is the single conversion point — adapters
+        and pools always report on their own clocks."""
+        cost = self._costs[name]
+        if cost == 1:
+            return obj
+
+        def conv(x):
+            if isinstance(x, dict):
+                return {k: (v * cost if k.endswith("_ticks")
+                            and isinstance(v, (int, float))
+                            else conv(v))
+                        for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return type(x)(conv(v) for v in x)
+            return x
+
+        return conv(obj)
+
     def latency_summary(self) -> dict:
-        return {name: engine.latency_summary()
+        """Per-engine latency summaries, tick figures converted onto the
+        front-door clock (see ``_on_door_clock``)."""
+        return {name: self._on_door_clock(name, engine.latency_summary())
                 for name, engine in self.engines.items()}
 
     def health(self) -> dict:
         """Aggregate health report: per-engine `SlotEngine.health()`
-        plus the front door's own view of which engines are down."""
+        (queue depth + occupancy — the dispatcher's load signal doubles
+        as the operator's) *folded with* each engine's latency-summary
+        percentiles on the front-door clock, plus the door's own view of
+        which engines are down — one surface for observability and load
+        signals alike."""
         return {
             "tick": self.tick,
             "down": dict(self.down),
-            "engines": {name: engine.health()
-                        for name, engine in self.engines.items()},
+            "engines": {
+                name: {
+                    **engine.health(),
+                    "tick_cost": self._costs[name],
+                    "latency": self._on_door_clock(
+                        name, engine.latency_summary()),
+                }
+                for name, engine in self.engines.items()},
         }
 
 
@@ -148,6 +240,14 @@ def main() -> None:
     ap.add_argument("--video-streams", type=int, default=0,
                     help="with --mixed: add N multi-tick video streams "
                          "(delta-gated detection, DESIGN.md §9)")
+    ap.add_argument("--vision-replicas", type=int, default=1,
+                    help="with --mixed: serve vision from a ReplicaPool "
+                         "of N engines behind least-loaded dispatch "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--lm-tick-cost", type=int, default=1,
+                    help="with --mixed: front-door ticks one LM engine "
+                         "tick costs — cheap engines tick more often "
+                         "(event-driven cadences, DESIGN.md §11)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -161,7 +261,8 @@ def main() -> None:
     params, _ = family.init(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, max_batch=args.max_batch,
                          max_len=args.max_len,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         tick_cost=args.lm_tick_cost if args.mixed else 1)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -173,7 +274,14 @@ def main() -> None:
     if args.mixed:
         from repro.data import SyntheticVWW
 
-        vision, vcfg = _make_vision_engine()
+        vis0, vcfg = _make_vision_engine()
+        vision = vis0
+        if args.vision_replicas > 1:
+            from repro.serving import ReplicaPool
+
+            more = [_make_vision_engine()[0]
+                    for _ in range(args.vision_replicas - 1)]
+            vision = ReplicaPool(vis0, *more)
         frames = SyntheticVWW(image_size=vcfg.image_size,
                               batch=args.vision_requests).batch_at(0)["images"]
         for uid in range(args.vision_requests):
@@ -186,7 +294,7 @@ def main() -> None:
                                      StreamRequest, SyntheticVideo,
                                      init_detect_head)
 
-            vparams, vbn = vision._params, vision._bn
+            vparams, vbn = vis0._params, vis0._bn
             det = init_detect_head(
                 jax.random.PRNGKey(2),
                 head_out_channels(vcfg),

@@ -17,10 +17,11 @@ from repro.serving.faults import (
     InjectedLaunchError,
 )
 from repro.serving.engine import Request, ServeEngine, greedy_generate
+from repro.serving.pool import ReplicaPool
 from repro.serving.vision import VisionEngine, VisionRequest
 
 __all__ = ["Request", "ServeEngine", "greedy_generate",
-           "VisionEngine", "VisionRequest",
+           "VisionEngine", "VisionRequest", "ReplicaPool",
            "ScheduledRequest", "SlotEngine",
            "EVICTION_POLICIES", "drop_newest", "drop_oldest",
            "shed_deadline",

@@ -151,7 +151,10 @@ class ServeEngine(SlotEngine):
                  evict: str = "drop-newest", **core):
         """``core`` forwards the scheduler's fault-tolerance knobs
         (``admission`` / ``max_serve_ticks`` / ``launch_retries`` /
-        ``faults`` — DESIGN.md §10) to `SlotEngine`."""
+        ``faults`` — DESIGN.md §10) and the event-driven front door's
+        cadence declaration (``tick_cost`` — an LM prefill/decode launch
+        is the heaviest tick in a mixed door, so LM engines typically
+        declare the largest cost, DESIGN.md §11) to `SlotEngine`."""
         super().__init__(max_batch, max_queue=max_queue, evict=evict, **core)
         self.cfg = cfg
         self.params = params

@@ -151,6 +151,18 @@ EVICTION_POLICIES: dict[str, Callable] = {
 }
 
 
+def tick_percentiles(values: Sequence[float]) -> tuple[float, float, float]:
+    """(p50, p95, p99) of a tick series; zeros when empty.  Shared by
+    `SlotEngine.latency_summary`, the replica pool's pooled ledger, and
+    the serving benches, so every percentile in the stack is the same
+    (linear-interpolation) estimator."""
+    if not values:
+        return 0.0, 0.0, 0.0
+    arr = np.asarray(values, np.float64)
+    return (float(np.percentile(arr, 50)), float(np.percentile(arr, 95)),
+            float(np.percentile(arr, 99)))
+
+
 def _undrained_counts(engine) -> tuple[int, int]:
     """(queued, occupied-slot) counts across an engine or a front door."""
     subs = getattr(engine, "engines", None)
@@ -223,6 +235,7 @@ class SlotEngine:
                  max_serve_ticks: int | None = None,
                  launch_retries: int = 2,
                  retry_backoff_s: float = 0.0,
+                 tick_cost: int = 1,
                  faults=None):
         """Fault-tolerance knobs (all off by default — the core without
         them is tick-for-tick the pre-§10 machine):
@@ -237,11 +250,23 @@ class SlotEngine:
                                     per attempt; 0 = no backoff sleep)
         ``faults``                  a `serving.faults.FaultInjector` —
                                     deterministic chaos for any adapter
+
+        ``tick_cost`` is declarative capacity metadata for the
+        event-driven front door (`launch/serve.py::FrontDoor`,
+        DESIGN.md §11): one engine tick costs this many ticks of
+        front-door time, so a cheap engine (vision microbatch) ticks
+        several times while an expensive one (LM prefill) ticks once.
+        The engine itself never reads it — its own clock stays
+        one-per-step — and the door converts tick-denominated ledgers
+        onto the shared clock exactly once.
         """
         if isinstance(evict, str):
             evict = EVICTION_POLICIES[evict]
         if admission not in (None, "deadline"):
             raise ValueError(f"unknown admission policy {admission!r}")
+        if not (isinstance(tick_cost, int) and tick_cost >= 1):
+            raise ValueError(f"tick_cost must be an int >= 1, got "
+                             f"{tick_cost!r}")
         self.n_slots = n_slots
         self.max_queue = max_queue
         self._evict = evict
@@ -249,6 +274,7 @@ class SlotEngine:
         self.max_serve_ticks = max_serve_ticks
         self.launch_retries = launch_retries
         self.retry_backoff_s = retry_backoff_s
+        self.tick_cost = tick_cost
         self.faults = faults
         self.tick = 0
         self.queue: list = []
@@ -345,6 +371,35 @@ class SlotEngine:
         req.evicted_tick = self.tick
         self.rejected.append(req)
         self.stats["rejections"] += 1
+
+    def admission_probe(self, req) -> str:
+        """Non-mutating preview of the status ``submit`` would return
+        for ``req`` at the current tick — nothing lands on any ledger,
+        no victim is evicted, the request is untouched on return.
+
+        `serving.pool.ReplicaPool` dispatches on this: it probes
+        replicas in least-loaded order and commits the request to the
+        first that will admit, so a rejection is recorded on exactly
+        one replica instead of every one it was offered to.  The
+        preview is exact because probe and the committing ``submit``
+        run back-to-back on one thread: the admission projection and
+        the eviction policy see identical state (the policy runs
+        against a *copy* of the queue, so a victim-selecting policy
+        like ``shed_deadline`` cannot shed anyone during the probe).
+        """
+        if self.halted is not None:
+            return REJECTED_HALTED
+        prev = req.submitted_tick
+        req.submitted_tick = self.tick  # policies read "now" off the request
+        try:
+            if self.admission == "deadline" and self._projected_miss(req):
+                return REJECTED_DEADLINE
+            if self.max_queue is not None and len(self.queue) >= self.max_queue:
+                if self._evict(list(self.queue), req) is req:
+                    return REJECTED_QUEUE
+            return ADMITTED
+        finally:
+            req.submitted_tick = prev
 
     def _estimated_serve_ticks(self) -> float:
         """Mean slot residency of completed traffic (1.0 before any)."""
@@ -518,9 +573,10 @@ class SlotEngine:
 
     def health(self) -> dict:
         """Degradation/fault report: halted state, adapter degradation
-        (e.g. "patches" after kernel-fault fallback), and the fault
-        counters — what an operator reads before trusting the latency
-        summary."""
+        (e.g. "patches" after kernel-fault fallback), the fault
+        counters, and the instantaneous load signal (queue depth +
+        occupied slots — the same score `ReplicaPool` dispatches on) —
+        what an operator reads before trusting the latency summary."""
         return {
             "halted": self.halted,
             "degraded": self.degraded,
@@ -529,16 +585,25 @@ class SlotEngine:
             "failed": len(self.failed),
             "evicted": len(self.evicted),
             "rejected": len(self.rejected),
+            "queue_depth": len(self.queue),
+            "occupied_slots": sum(s is not None for s in self.slots),
         }
 
     def latency_summary(self) -> dict:
         """Aggregate counters: completions, slot utilization (completed /
         slot-ticks and busy / slot-ticks over non-idle launches), mean
-        queueing delay and slot residency in ticks, mean per-launch
-        wall-clock, and the shed/failed accounting (eviction, rejection,
-        failure, deadline-miss counts)."""
+        *and* p50/p95/p99 queueing delay, slot residency in ticks, mean
+        per-launch wall-clock, and the shed/failed accounting (eviction,
+        rejection, failure, deadline-miss counts).  Tick-denominated
+        keys all end in ``_ticks`` — the front door relies on that
+        suffix to convert them onto its shared clock (DESIGN.md §11).
+        """
         served = self.stats["served"]
         slot_ticks = self.stats["slot_ticks"]
+        q50, q95, q99 = tick_percentiles(
+            [r.queue_ticks for r in self.completed])
+        s50, s95, s99 = tick_percentiles(
+            [r.serve_ticks for r in self.completed])
         return {
             "served": served,
             "launches": self.stats["launches"],
@@ -558,6 +623,10 @@ class SlotEngine:
             "mean_serve_ticks": (
                 sum(r.serve_ticks for r in self.completed) / served
                 if served else 0.0),
+            "p50_queue_ticks": q50, "p95_queue_ticks": q95,
+            "p99_queue_ticks": q99,
+            "p50_serve_ticks": s50, "p95_serve_ticks": s95,
+            "p99_serve_ticks": s99,
             "mean_launch_us": (self.stats["wall_us"] / self.stats["launches"]
                                if self.stats["launches"] else 0.0),
         }

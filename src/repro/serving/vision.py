@@ -122,7 +122,12 @@ class VisionEngine(SlotEngine):
         ``degrade_after``: launch-fault count after which the engine
         falls back from the fused conv to the patches reference path
         (DESIGN.md §10); ``core`` forwards the scheduler's
-        fault-tolerance knobs to `SlotEngine`.
+        fault-tolerance knobs and the front door's ``tick_cost``
+        cadence declaration (a one-tick microbatch is cheaper than an
+        LM launch and dearer than a stream frame, DESIGN.md §11) to
+        `SlotEngine`.  Pool several engines (one per submesh of
+        `launch.mesh.make_submeshes`) behind a
+        `serving.pool.ReplicaPool` for replica-parallel serving.
         """
         super().__init__(max_batch, max_queue=max_queue, evict=evict, **core)
         self.cfg = cfg

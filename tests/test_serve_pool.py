@@ -1,0 +1,316 @@
+"""Replica pools + event-driven front door (serving/pool.py,
+launch/serve.py, DESIGN.md §11): lockstep equivalence of the event
+loop, deterministic least-loaded dispatch, halted-replica exclusion,
+exactly-once accounting under overload, per-engine cadences, and the
+door-clock latency conversion.  The 8-virtual-device lane adds a
+2-replica pool of mesh-sharded vision engines over disjoint submeshes.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.launch.serve import FrontDoor
+from repro.serving import ReplicaPool
+from repro.serving.scheduler import (
+    ADMITTED,
+    REJECTED_HALTED,
+    REJECTED_QUEUE,
+    ScheduledRequest,
+    SlotEngine,
+)
+
+# ------------------------------------------------------------ dummy adapters
+# (tests cannot import benchmarks.*; these mirror the test_scheduler.py
+# dummies — distinct request types per modality so the door can route)
+
+
+@dataclasses.dataclass
+class _AReq(ScheduledRequest):
+    uid: int = 0
+
+
+@dataclasses.dataclass
+class _BReq(ScheduledRequest):
+    uid: int = 0
+    work: int = 1  # engine ticks of slot residency
+    done: int = 0
+
+
+class _AEngine(SlotEngine):
+    """One-tick modality (the vision shape)."""
+
+    request_type = _AReq
+
+    def _launch(self, active):
+        return None
+
+    def _absorb(self, i, req, result):
+        return True
+
+
+class _BEngine(SlotEngine):
+    """Multi-tick modality (the LM/stream shape)."""
+
+    request_type = _BReq
+
+    def _launch(self, active):
+        return None
+
+    def _absorb(self, i, req, result):
+        req.done += 1
+        return req.done >= req.work
+
+
+class _RaisingEngine(_AEngine):
+    """Escapes its own launch containment after ``fail_at`` ticks —
+    the bug class the pool's isolation boundary must contain."""
+
+    def __init__(self, *a, fail_at=2, **kw):
+        super().__init__(*a, **kw)
+        self.fail_at = fail_at
+
+    def step(self):
+        if self.tick + 1 >= self.fail_at:
+            self.tick += 1
+            raise RuntimeError("replica wedged")
+        return super().step()
+
+
+def _mixed_trace(seed: int, n: int) -> list:
+    """Seeded mixed two-modality trace with bursty arrivals."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        arrival = int(rng.integers(0, max(1, n // 2)))
+        if rng.random() < 0.5:
+            reqs.append(_AReq(uid=i, arrival_tick=arrival))
+        else:
+            reqs.append(_BReq(uid=i, work=1 + int(rng.integers(0, 4)),
+                              arrival_tick=arrival))
+    return reqs
+
+
+def _ledger(door) -> list:
+    """Every request the door ever saw, with its full latency ledger —
+    the bit-identity witness for the equivalence property."""
+    rows = [("done", name, r.uid, r.submitted_tick, r.served_tick,
+             r.finished_tick, r.queue_ticks, r.serve_ticks)
+            for name, r in door.completed]
+    for name, e in door.engines.items():
+        for kind in ("failed", "evicted", "rejected"):
+            rows += [(kind, name, r.uid, r.submitted_tick, r.evicted_tick,
+                      r.queue_ticks) for r in getattr(e, kind)]
+    return sorted(rows)
+
+
+# ------------------------------------------------- lockstep equivalence
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 40))
+def test_event_loop_matches_lockstep_door(seed, n):
+    """With every tick_cost equal, the event-driven door over 1-replica
+    pools replays the lockstep reference door bit-identically: same
+    completion set, same per-request ledgers, same rejections — on any
+    seeded mixed trace, including overloaded ones (bounded queues)."""
+    def build(lockstep, pooled):
+        def wrap(e):
+            return ReplicaPool(e) if pooled else e
+        return FrontDoor(
+            lockstep=lockstep,
+            a=wrap(_AEngine(2, max_queue=3, evict="drop-newest")),
+            b=wrap(_BEngine(2, max_queue=3, evict="drop-oldest")))
+
+    ref = build(lockstep=True, pooled=False)
+    evt = build(lockstep=False, pooled=True)
+    ref.run(_mixed_trace(seed, n), max_ticks=10_000, on_undrained="raise")
+    evt.run(_mixed_trace(seed, n), max_ticks=10_000, on_undrained="raise")
+    assert _ledger(ref) == _ledger(evt)
+    assert ref.tick == evt.tick
+
+
+# ------------------------------------------------------- pool dispatch
+
+
+def test_pool_least_loaded_dispatch_deterministic():
+    """Arrivals spread least-loaded-first with index tie-breaks: the
+    same submission sequence always lands on the same replicas."""
+    def run_once():
+        pool = ReplicaPool(_AEngine(1, max_queue=8), _AEngine(1, max_queue=8))
+        for uid in range(5):
+            assert pool.submit(_AReq(uid=uid)) == ADMITTED
+        return [[r.uid for r in rep.queue] for rep in pool.replicas]
+
+    first = run_once()
+    # Tie at every even submission breaks to replica 0.
+    assert first == [[0, 2, 4], [1, 3]]
+    assert run_once() == first
+
+
+def test_pool_rejects_only_when_all_replicas_reject():
+    """Overflow on the least-loaded replica falls through to its
+    sibling; rejection happens only when every replica is full — and
+    lands on exactly one replica's ledger."""
+    pool = ReplicaPool(_AEngine(1, max_queue=1), _AEngine(1, max_queue=1))
+    assert [pool.submit(_AReq(uid=u)) for u in range(2)] == [ADMITTED] * 2
+    assert pool.submit(_AReq(uid=2)) == REJECTED_QUEUE
+    # Drop-newest records the overflow victim on the evicted ledger of
+    # exactly one replica (the least-loaded one) — never on both.
+    assert sum(len(rep.evicted) for rep in pool.replicas) == 1
+
+
+def test_pool_halted_replica_excluded_but_pool_serves():
+    """A replica whose step escapes containment is halted and excluded
+    from dispatch; its traffic fails visibly, the sibling keeps serving,
+    and the pool reports halted only when every replica is down."""
+    bad = _RaisingEngine(1, max_queue=4, fail_at=1)
+    good = _AEngine(1, max_queue=4)
+    pool = ReplicaPool(bad, good)
+    done = pool.run([_AReq(uid=u, arrival_tick=u) for u in range(6)],
+                    max_ticks=50, on_undrained="warn")
+    assert pool.down == {0: "RuntimeError: replica wedged"}
+    assert pool.halted is None  # one live replica keeps the pool up
+    assert bad.halted is not None
+    # Everything the wedged replica held failed onto its ledger; the
+    # survivor served the rest, including all post-failure arrivals.
+    assert {r.uid for r in done} | {r.uid for r in pool.failed} == set(range(6))
+    assert all(r.uid in {r2.uid for r2 in good.completed} for r in done)
+    assert pool.health()["halted"] is None
+    # After the survivor dies too, the pool is down and bounces submits.
+    good.halt("drained")
+    assert pool.halted is not None
+    assert pool.submit(_AReq(uid=9)) == REJECTED_HALTED
+
+
+def test_pool_exactly_once_accounting_under_overload():
+    """Sustained overload of a bounded-queue pool: every submitted
+    request lands on exactly one ledger (completed / rejected — never
+    duplicated, never lost), both replicas take work, and admitted
+    traffic all completes (no starvation)."""
+    pool = ReplicaPool(_AEngine(1, max_queue=2), _AEngine(1, max_queue=2))
+    reqs = [_AReq(uid=u, arrival_tick=u // 8) for u in range(80)]
+    done = pool.run(reqs, max_ticks=200, on_undrained="raise")
+    uids = [r.uid for r in done] + [r.uid for r in pool.evicted]
+    assert sorted(uids) == list(range(80))  # exactly once, nowhere twice
+    assert not pool.failed and not pool.rejected
+    assert all(len(rep.completed) > 0 for rep in pool.replicas)
+    served = {r.uid for rep in pool.replicas for r in rep.completed}
+    assert len(served) == len(done)  # no request served by two replicas
+
+
+def test_pool_validates_replica_homogeneity():
+    with pytest.raises(ValueError):
+        ReplicaPool(_AEngine(1), _BEngine(1))
+    with pytest.raises(ValueError):
+        ReplicaPool(_AEngine(1, tick_cost=1), _AEngine(1, tick_cost=2))
+    with pytest.raises(ValueError):
+        ReplicaPool()
+
+
+# ------------------------------------------------- cadences + door clock
+
+
+def test_door_cadences_fire_engines_at_tick_cost():
+    """A tick_cost=3 engine ticks once per three door ticks, first at
+    door tick 3; a tick_cost=1 engine ticks every door tick."""
+    fast, slow = _AEngine(1), _BEngine(1, tick_cost=3)
+    door = FrontDoor(fast=fast, slow=slow)
+    ticks = []
+    for _ in range(9):
+        door.step()
+        ticks.append((fast.tick, slow.tick))
+    assert ticks[0] == (1, 0)
+    assert ticks[2] == (3, 1)  # slow pays its cost, then fires
+    assert ticks[8] == (9, 3)
+
+
+def test_door_converts_latency_to_door_clock():
+    """Every ``*_ticks`` figure the door reports is engine ticks x
+    tick_cost — converted once, in the door, at any nesting depth."""
+    slow = _BEngine(1, max_queue=4, tick_cost=2)
+    door = FrontDoor(slow=slow)
+    done = door.run([_BReq(uid=u, work=1, arrival_tick=0) for u in range(3)],
+                    max_ticks=50, on_undrained="raise")
+    assert len(done) == 3
+    eng = slow.latency_summary()
+    via_door = door.latency_summary()["slow"]
+    for key in ("mean_queue_ticks", "mean_serve_ticks", "p95_queue_ticks",
+                "p99_serve_ticks"):
+        assert via_door[key] == 2 * eng[key]
+    assert via_door["served"] == eng["served"]  # counts don't scale
+    health = door.health()["engines"]["slow"]
+    assert health["tick_cost"] == 2
+    assert health["queue_depth"] == 0
+    assert health["latency"]["mean_serve_ticks"] == 2 * eng["mean_serve_ticks"]
+
+
+def test_door_converts_pool_latency_at_depth():
+    """The conversion recurses into a pool's per-replica summaries."""
+    pool = ReplicaPool(_BEngine(1, tick_cost=2), _BEngine(1, tick_cost=2))
+    door = FrontDoor(b=pool)
+    door.run([_BReq(uid=u, work=2) for u in range(4)],
+             max_ticks=50, on_undrained="raise")
+    summary = door.latency_summary()["b"]
+    for rep_summary, rep in zip(summary["replicas"], pool.replicas):
+        raw = rep.latency_summary()
+        assert rep_summary["mean_serve_ticks"] == 2 * raw["mean_serve_ticks"]
+
+
+def test_door_route_error_lists_registered_types():
+    door = FrontDoor(a=_AEngine(1), b=_BEngine(1))
+    with pytest.raises(TypeError) as err:
+        door.submit(object())
+    msg = str(err.value)
+    assert "a=_AReq" in msg and "b=_BReq" in msg
+
+
+def test_lockstep_door_rejects_nonunit_costs():
+    with pytest.raises(ValueError):
+        FrontDoor(lockstep=True, b=_BEngine(1, tick_cost=2))
+
+
+# ----------------------------- multi-device lane (scripts/ci.sh re-runs
+# this test under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (CI multi-device lane)")
+
+
+@needs8
+def test_pooled_sharded_vision_matches_single_engine():
+    """A 2-replica pool of mesh-sharded VisionEngines over the disjoint
+    submeshes of `make_submeshes(2)` — replica-parallel across pools,
+    data-parallel within — serves the same answers as one single-device
+    engine: every request completes with matching probs/labels."""
+    from repro.data import SyntheticVWW
+    from repro.launch.mesh import make_submeshes
+    from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+    from repro.serving import VisionEngine, VisionRequest
+
+    cfg = MNV2Config(variant="p2m", image_size=20, width=0.25,
+                     head_channels=16)
+    params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
+    imgs = SyntheticVWW(image_size=20, batch=8, seed=0).batch_at(0)["images"]
+
+    sub = make_submeshes(2)
+    assert [m.devices.size for m in sub] == [4, 4]
+    assert not set(map(id, sub[0].devices.flat)) & \
+        set(map(id, sub[1].devices.flat))  # disjoint replicas
+    pool = ReplicaPool(
+        VisionEngine(params, bn, cfg, max_batch=4, mesh=sub[0]),
+        VisionEngine(params, bn, cfg, max_batch=4, mesh=sub[1]))
+    single = VisionEngine(params, bn, cfg, max_batch=8)
+
+    reqs = lambda: [VisionRequest(uid=i, image=imgs[i]) for i in range(8)]
+    ref = {r.uid: r for r in single.run(reqs())}
+    done = pool.run(reqs())
+    assert len(done) == 8
+    assert all(len(rep.completed) == 4 for rep in pool.replicas)
+    for r in done:
+        np.testing.assert_allclose(r.probs, ref[r.uid].probs,
+                                   rtol=1e-4, atol=1e-3)
+        assert r.label == ref[r.uid].label
