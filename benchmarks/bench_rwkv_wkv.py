@@ -1,0 +1,161 @@
+"""Chunked-RWKV6 WKV kernel + stateful LM-session serving bench.
+
+Two row families (DESIGN.md §12):
+
+  p2m_rwkv_wkv_smoke      the chunked WKV stack against the naive
+                          per-token scan: forward / final-state / all-six
+                          -gradients parity as exact 0-or-1 metrics (the
+                          gate holds each at 1.0 — parity either survives
+                          fp32 tolerance or the kernel is wrong), plus
+                          informational wall-clock for the XLA twin, the
+                          Pallas kernel, and the naive scan.
+
+  p2m_lm_session_smoke    seeded multi-turn conversations replayed
+                          through the event-driven `FrontDoor` into a
+                          `SessionEngine` (slot-resident WKV state across
+                          turns).  Every gated metric counts ticks and
+                          tokens, never wall-clock: completion_rate,
+                          deterministic_replay (two fresh replays must
+                          agree bit-for-bit on outputs AND tick counts),
+                          and prefill_tick_speedup (tick count of the
+                          token-by-token prefill engine over the fused
+                          chunked-WKV prefill engine on identical
+                          traffic) — exact machine-independent floors in
+                          `scripts/bench_gate.py`.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_smoke_config
+from repro.kernels.rwkv_wkv import ops as wkv_ops
+from repro.launch.serve import FrontDoor
+from repro.models import rwkv6
+from repro.models.families import get_family
+from repro.serving import SessionEngine, SessionRequest
+
+#: Kernel parity / timing shape (B, S, H, D) — off the chunk quantum on
+#: purpose, with a non-zero initial state.
+KSHAPE = (2, 45, 3, 16)
+#: Session replay shape.
+N_SESSIONS, N_TURNS, MAX_NEW = 6, 3, 5
+MAX_TICKS = 2000
+
+
+def _kernel_inputs(key, b, s, h, d):
+    ks = jax.random.split(key, 6)
+    return (jax.random.normal(ks[0], (b, s, h, d), jnp.float32),
+            jax.random.normal(ks[1], (b, s, h, d), jnp.float32),
+            jax.random.normal(ks[2], (b, s, h, d), jnp.float32),
+            -jax.random.uniform(ks[3], (b, s, h, d), jnp.float32,
+                                1e-4, 4.0),
+            jax.random.normal(ks[4], (h, d), jnp.float32) * 0.3,
+            jax.random.normal(ks[5], (b, h, d, d), jnp.float32))
+
+
+def _parity(a, b, rtol=1e-4, atol=1e-4) -> float:
+    """Exact 0/1 gateable metric: fp32-tolerance allclose."""
+    return float(np.allclose(np.asarray(a), np.asarray(b),
+                             rtol=rtol, atol=atol))
+
+
+def run_kernel(smoke: bool = False) -> None:
+    b, s, h, d = KSHAPE
+    args = _kernel_inputs(jax.random.PRNGKey(0), b, s, h, d)
+    y_ref, s_ref = rwkv6.wkv_naive(*args)
+
+    def loss(fn):
+        return lambda *a: fn(*a)[0].sum() + fn(*a)[1].sum()
+
+    g_ref = jax.grad(loss(rwkv6.wkv_naive),
+                     argnums=tuple(range(6)))(*args)
+
+    metrics: dict[str, float] = {"shape": f"{b}x{s}x{h}x{d}"}
+    for impl in ("xla", "pallas"):
+        fn = jax.jit(functools.partial(wkv_ops.wkv, impl=impl))
+        y, sf = fn(*args)
+        g = jax.jit(jax.grad(loss(functools.partial(wkv_ops.wkv,
+                                                    impl=impl)),
+                             argnums=tuple(range(6))))(*args)
+        metrics[f"{impl}_fwd_parity"] = _parity(y, y_ref)
+        metrics[f"{impl}_state_parity"] = _parity(sf, s_ref)
+        metrics[f"{impl}_grad_parity"] = float(all(
+            _parity(a, r, rtol=2e-3, atol=2e-4)
+            for a, r in zip(g, g_ref)))
+        metrics[f"{impl}_us"] = timeit(fn, *args)
+    naive_us = timeit(jax.jit(rwkv6.wkv_naive), *args)
+    metrics["naive_us"] = naive_us
+    metrics["xla_speedup_vs_naive"] = naive_us / metrics["xla_us"]
+
+    emit("p2m_rwkv_wkv_smoke", metrics["xla_us"],
+         f"chunked vs naive B{b} S{s} H{h} D{d}: "
+         f"xla fwd/state/grad parity "
+         f"{metrics['xla_fwd_parity']:.0f}/"
+         f"{metrics['xla_state_parity']:.0f}/"
+         f"{metrics['xla_grad_parity']:.0f}, "
+         f"pallas {metrics['pallas_fwd_parity']:.0f}/"
+         f"{metrics['pallas_state_parity']:.0f}/"
+         f"{metrics['pallas_grad_parity']:.0f}; "
+         f"naive {naive_us:.0f}us",
+         **metrics)
+
+
+def _conversations(cfg, seed: int = 0) -> list[list[list[int]]]:
+    rng = np.random.default_rng(seed)
+    return [[rng.integers(0, cfg.vocab, rng.integers(5, 11)).tolist()
+             for _ in range(N_TURNS)] for _ in range(N_SESSIONS)]
+
+
+def _replay(params, cfg, convs, prefill_chunk: int):
+    """One session replay through the front door; returns
+    (per-session outputs, ticks, wall seconds)."""
+    eng = SessionEngine(params, cfg, max_batch=2, max_len=256,
+                        prefill_chunk=prefill_chunk)
+    door = FrontDoor(chat=eng)
+    reqs = [SessionRequest(uid=i, turns=[list(t) for t in ts],
+                           max_new_tokens=MAX_NEW)
+            for i, ts in enumerate(convs)]
+    t0 = time.perf_counter()
+    done = door.run(reqs, max_ticks=MAX_TICKS, on_undrained="raise")
+    wall_s = time.perf_counter() - t0
+    outs = {r.uid: r.outputs for _, r in done}
+    return outs, eng.tick, wall_s, len(done)
+
+
+def run_sessions(smoke: bool = False) -> None:
+    cfg = get_smoke_config("rwkv6-3b").replace(dtype=jnp.float32)
+    params, _ = get_family(cfg).init(jax.random.PRNGKey(0), cfg)
+    convs = _conversations(cfg)
+
+    outs_a, ticks_a, wall_a, done_a = _replay(params, cfg, convs, 4)
+    outs_b, ticks_b, wall_b, done_b = _replay(params, cfg, convs, 4)
+    outs_tok, ticks_tok, _, _ = _replay(params, cfg, convs, 1)
+
+    completion = done_a / len(convs)
+    deterministic = float(outs_a == outs_b and ticks_a == ticks_b)
+    token_parity = float(outs_a == outs_tok)
+    speedup = ticks_tok / max(ticks_a, 1)
+    toks = sum(len(o) for outs in outs_a.values() for o in outs)
+
+    emit("p2m_lm_session_smoke", wall_a / max(ticks_a, 1) * 1e6,
+         f"{len(convs)} sessions x {N_TURNS} turns, {toks} toks; "
+         f"complete {completion:.2f}, deterministic {deterministic:.0f}, "
+         f"chunked prefill {ticks_a} ticks vs tokenwise {ticks_tok} "
+         f"({speedup:.2f}x)",
+         sessions=len(convs), turns=N_TURNS,
+         completion_rate=completion,
+         deterministic_replay=deterministic,
+         tokenwise_parity=token_parity,
+         prefill_tick_speedup=speedup,
+         ticks=ticks_a, tokenwise_ticks=ticks_tok)
+
+
+def run(smoke: bool = False) -> None:
+    run_kernel(smoke=smoke)
+    run_sessions(smoke=smoke)

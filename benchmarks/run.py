@@ -23,6 +23,7 @@ def main() -> None:
         bench_paper_tables,
         bench_fig7_quant,
         bench_p2m_kernel,
+        bench_rwkv_wkv,
         bench_serve_chaos,
         bench_serve_saturation,
         bench_train_serve,
@@ -32,17 +33,19 @@ def main() -> None:
     if smoke:
         # Serving rows first: bench_p2m_kernel.run writes the smoke JSON
         # (prefix p2m_) that scripts/bench_gate.py reads; the sharded
-        # vision-serving, video-stream, chaos-replay, and pool-saturation
-        # gates ride in it.
+        # vision-serving, video-stream, chaos-replay, pool-saturation,
+        # WKV-parity, and LM-session gates ride in it.
         bench_train_serve.run_vision_serve(smoke=True)
         bench_train_serve.run_video_stream(smoke=True)
         bench_serve_chaos.run(smoke=True)
         bench_serve_saturation.run(smoke=True)
+        bench_rwkv_wkv.run(smoke=True)
         bench_p2m_kernel.run(smoke=True)
         return
     bench_paper_tables.run()
     bench_fig7_quant.run()
     bench_p2m_kernel.run()
+    bench_rwkv_wkv.run()
     bench_train_serve.run()
     bench_train_serve.run_video_stream()
     bench_serve_chaos.run()

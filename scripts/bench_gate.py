@@ -94,6 +94,33 @@ GATES: dict[str, list[tuple[str | None, str, float]]] = {
         [(None, "speedup_vs_pool1", 2.5)],
     "p2m_serve_saturation_equiv_smoke":
         [(None, "lockstep_equivalent", 1.0)],
+    # Chunked-RWKV6 WKV kernel (benchmarks/bench_rwkv_wkv.py, DESIGN.md
+    # §12): parity metrics are exact 0-or-1 fp32-tolerance checks of the
+    # XLA twin and the Pallas kernel (interpret mode on CPU) against the
+    # naive per-token scan — forward output, final state, and all six
+    # closed-form gradients.  1.0 floors: parity either holds or the
+    # kernel math regressed; there is no noise band.
+    "p2m_rwkv_wkv_smoke":
+        [(None, "xla_fwd_parity", 1.0),
+         (None, "xla_state_parity", 1.0),
+         (None, "xla_grad_parity", 1.0),
+         (None, "pallas_fwd_parity", 1.0),
+         (None, "pallas_state_parity", 1.0),
+         (None, "pallas_grad_parity", 1.0)],
+    # Stateful streaming-LM sessions through the front door (DESIGN.md
+    # §12.4): every gated metric counts ticks and tokens, never
+    # wall-clock, so the floors are exact machine-independent guards.
+    # The greedy replay is deterministic — two fresh replays must agree
+    # bit-for-bit (1.0), everything completes (0.999 absorbs float
+    # division only), the chunked-WKV prefill engine finishes the same
+    # traffic in fewer ticks than the token-by-token engine (measured
+    # 1.91x; the floor sits under that deterministic value), and the
+    # chunked path emits token-identical outputs to the tokenwise path.
+    "p2m_lm_session_smoke":
+        [(None, "completion_rate", 0.999),
+         (None, "deterministic_replay", 1.0),
+         (None, "tokenwise_parity", 1.0),
+         (None, "prefill_tick_speedup", 1.2)],
 }
 
 # Metrics that compare a sharded path against single-device: meaningless

@@ -22,20 +22,24 @@ echo "== multi-device lane (8 virtual CPU devices, in-process) =="
 # (DESIGN.md §9), the sharded fault-containment test in test_faults.py
 # (launch quarantine under a data mesh, DESIGN.md §10), and the
 # replica-pool-over-submeshes parity test in test_serve_pool.py (a
-# 2-replica pool of mesh-sharded vision engines, DESIGN.md §11); the
-# rest of each file re-runs under the virtual-device topology as a
-# bonus.
+# 2-replica pool of mesh-sharded vision engines, DESIGN.md §11), and the
+# sharded stateful-LM-session tests in test_sessions.py (slot-resident
+# WKV state over a data mesh, bitwise vs single device; DESIGN.md
+# §12.4); the rest of each file re-runs under the virtual-device
+# topology as a bonus.
 # (test_distributed.py spawns its own 8-device subprocesses from tier-1.)
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   python -m pytest -x -q tests/test_sharding.py tests/test_vision_serving.py \
-    tests/test_video_stream.py tests/test_faults.py tests/test_serve_pool.py
+    tests/test_video_stream.py tests/test_faults.py tests/test_serve_pool.py \
+    tests/test_sessions.py
 
-echo "== benchmark smoke (p2m kernels + serving + video + chaos + saturation, reduced shapes) =="
+echo "== benchmark smoke (p2m kernels + serving + video + chaos + saturation + wkv + sessions, reduced shapes) =="
 # emits the p2m_video_stream_* rows the gate's skip-rate and
 # measured-bandwidth floors read, the p2m_serve_chaos_* rows its
-# completion-rate floors read (DESIGN.md §10), and the
+# completion-rate floors read (DESIGN.md §10), the
 # p2m_serve_saturation_* rows its pool-scaling and lockstep-equivalence
-# floors read (DESIGN.md §11)
+# floors read (DESIGN.md §11), and the p2m_rwkv_wkv_* / p2m_lm_session_*
+# rows its WKV-parity and session-determinism floors read (DESIGN.md §12)
 python benchmarks/run.py --smoke
 
 echo "== bench regression gate (vs BENCH_p2m_conv.json baseline) =="

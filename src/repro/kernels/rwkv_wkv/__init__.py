@@ -1,0 +1,22 @@
+"""Chunked RWKV-6 WKV linear-attention kernel (DESIGN.md §12).
+
+Tiers, all computing the same recurrence (`wkv_naive` in
+`models/rwkv6.py` is the per-token oracle):
+
+* :func:`ref.wkv_chunked_ref` — chunk-parallel XLA twin (masked matmul
+  against cumulative decays, inter-chunk state through a ``lax.scan``).
+  The reference the kernel is pinned to, and the building block the
+  closed-form backward reuses.
+* :func:`kernel.wkv_pallas` — the Pallas forward: grid over
+  (batch·head, sequence chunks) with the matrix-valued (dk × dv)
+  running state carried in a VMEM scratch across the sequence grid
+  steps.
+* :func:`ops.wkv` — the public op: Pallas forward with a closed-form
+  chunked VJP registered as ``custom_vjp`` (no forward replay through
+  autodiff), interpret-mode fallback off-TPU.
+"""
+from repro.kernels.rwkv_wkv.ops import wkv
+from repro.kernels.rwkv_wkv.ref import wkv_chunked_ref
+from repro.kernels.rwkv_wkv.kernel import wkv_pallas
+
+__all__ = ["wkv", "wkv_chunked_ref", "wkv_pallas"]

@@ -1,0 +1,150 @@
+"""Public WKV op: Pallas forward + closed-form chunked VJP (DESIGN.md §12.3).
+
+Mirrors `kernels/p2m_conv/ops.py`: the forward runs the Pallas kernel
+(interpret mode auto-selected off-TPU), and the registered ``custom_vjp``
+backward evaluates the *closed-form* chunked adjoints in XLA instead of
+re-differentiating a forward replay.  Residuals are just the inputs —
+the backward recomputes each chunk's entry state with a cheap state-only
+forward scan, then runs one reverse ``lax.scan`` over chunks carrying
+the state adjoint G = ∂L/∂S_C.
+
+Per chunk (derivation in DESIGN.md §12.3; e_prev = e^{L_{t-1}},
+e_kd = e^{L_C−L_s}, e_qd = e^{L_{t-1}−L_C}, Pm = strictly-masked dy·vᵀ):
+
+    dv = scoresᵀ@dy + (r·u∘k · dy)            + kd@G
+    dr = (dy@S0ᵀ)∘e_prev + (Pm@kd)∘e_qd       + (v·dy) u∘k
+    dk = ((Pmᵀ@qd) + v@Gᵀ)∘e_kd               + (v·dy) u∘r
+    du = Σ_t (v_t·dy_t) r_t∘k_t
+    dS0 = qᵀ@dy + e^{L_C}∘G                    (→ carry to previous chunk)
+
+and the log-decay gradient via the cumulative-sum structure
+L_j = Σ_{i≤j} lw_i: the per-position sensitivity g[j] is the r-side
+e^{+L_j} terms (shifted: they pair with r_{j+1}) minus the k-side
+e^{−L_j} terms, plus Σ_e S_C∘G at j = C−1 (the e^{+L_C} state decay);
+dlw_i = Σ_{j≥i} g[j] — a reversed cumsum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_wkv.kernel import wkv_pallas
+from repro.kernels.rwkv_wkv.ref import (
+    WKV_CHUNK,
+    chunk_inputs,
+    unchunk,
+    wkv_chunked_ref,
+)
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _wkv_op(r, k, v, lw, u, state, chunk: int, interpret: bool):
+    return wkv_pallas(r, k, v, lw, u, state, chunk=chunk,
+                      interpret=interpret)
+
+
+def _wkv_fwd(r, k, v, lw, u, state, chunk, interpret):
+    out = _wkv_op(r, k, v, lw, u, state, chunk, interpret)
+    return out, (r, k, v, lw, u, state)
+
+
+def _wkv_bwd(chunk, interpret, res, cts):
+    del interpret  # backward always runs the closed-form XLA adjoints
+    r, k, v, lw, u, state = res
+    dy, dstate = cts
+    b, s, h, d = r.shape
+    rc, kc, vc, lwc, n, _ = chunk_inputs(r, k, v, lw, chunk)
+    dyc = chunk_inputs(dy, dy, dy, dy, chunk)[0]
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+
+    # Residual recompute: every chunk's entry state (state-only scan).
+    def state_step(s0, inp):
+        kt, vt, lwt = inp
+        cum = jnp.cumsum(lwt, axis=1)
+        total = cum[:, -1:]
+        kd = kt * jnp.exp(total - cum)
+        s_new = jnp.exp(total[:, 0])[..., None] * s0 + jnp.einsum(
+            "bshd,bshe->bhde", kd, vt)
+        return s_new, s0
+
+    _, s0s = jax.lax.scan(state_step, state, (kc, vc, lwc))
+
+    def bwd_step(G, inp):
+        rt, kt, vt, lwt, dyt, s0 = inp
+        cum = jnp.cumsum(lwt, axis=1)
+        cum_prev = cum - lwt
+        total = cum[:, -1:]
+        e_prev = jnp.exp(cum_prev)
+        e_kd = jnp.exp(total - cum)
+        e_qd = jnp.exp(cum_prev - total)
+        kd = kt * e_kd
+        qd = rt * e_qd
+        scores = jnp.einsum("bthd,bshd->bhts", qd, kd)
+        scores = jnp.where(strict[None, None], scores, 0.0)
+        s_new = jnp.exp(total[:, 0])[..., None] * s0 + jnp.einsum(
+            "bshd,bshe->bhde", kd, vt)
+        # pairwise/diagonal v·dy products
+        Pm = jnp.einsum("bthe,bshe->bhts", dyt, vt)
+        Pm = jnp.where(strict[None, None], Pm, 0.0)
+        diagP = jnp.einsum("bthe,bthe->bth", dyt, vt)
+        diag = jnp.einsum("bthd,hd,bthd->bth", rt, u, kt)
+        ub = u[None, None]  # (1,1,H,D)
+        # dv: intra + diagonal + state kv
+        dv = (jnp.einsum("bhts,bthe->bshe", scores, dyt)
+              + diag[..., None] * dyt
+              + jnp.einsum("bshd,bhde->bshe", kd, G))
+        # dr: inter + intra + diagonal
+        dq = jnp.einsum("bthe,bhde->bthd", dyt, s0)
+        dqd = jnp.einsum("bhts,bshd->bthd", Pm, kd)
+        dr_exp = dq * e_prev + dqd * e_qd  # decay-carrying parts
+        dr = dr_exp + diagP[..., None] * ub * kt
+        # dk: intra + state kv (both through kd) + diagonal
+        dkd = (jnp.einsum("bhts,bthd->bshd", Pm, qd)
+               + jnp.einsum("bshe,bhde->bshd", vt, G))
+        dk_exp = dkd * e_kd
+        dk = dk_exp + diagP[..., None] * ub * rt
+        # dlw via L_j = Σ_{i≤j} lw_i: g[j] = (r-side, shifted) − (k-side)
+        # + the e^{+L_C} state-decay term at j = C−1; dlw = reversed cumsum.
+        gl_r = rt * dr_exp
+        gl_r = jnp.concatenate([gl_r[:, 1:], jnp.zeros_like(gl_r[:, :1])],
+                               axis=1)
+        g = gl_r - kt * dk_exp
+        sterm = jnp.einsum("bhde,bhde->bhd", s_new, G)
+        g = g.at[:, -1].add(sterm)
+        dlw = jnp.flip(jnp.cumsum(jnp.flip(g, axis=1), axis=1), axis=1)
+        # du (per chunk, summed over batch/time)
+        du_c = jnp.einsum("bth,bthd->hd", diagP, rt * kt)
+        # state adjoint for the previous chunk
+        q = rt * e_prev
+        dS0 = (jnp.einsum("bthd,bthe->bhde", q, dyt)
+               + jnp.exp(total[:, 0])[..., None] * G)
+        return dS0, (dr, dk, dv, dlw, du_c)
+
+    G0, (drc, dkc, dvc, dlwc, dus) = jax.lax.scan(
+        bwd_step, dstate, (rc, kc, vc, lwc, dyc, s0s), reverse=True)
+    un = lambda a: unchunk(a, b, s, h, d, chunk)
+    return un(drc), un(dkc), un(dvc), un(dlwc), dus.sum(0), G0
+
+
+_wkv_op.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def wkv(r, k, v, lw, u, state, *, chunk: int = WKV_CHUNK,
+        impl: str = "pallas", interpret: bool | None = None):
+    """Chunked WKV.  ``impl``: "pallas" (kernel forward + closed-form
+    VJP; ``interpret=None`` auto-selects interpret mode off-TPU) or
+    "xla" (the chunked `lax.scan` twin, differentiable via autodiff)."""
+    if impl == "xla":
+        return wkv_chunked_ref(r, k, v, lw, u, state, chunk)
+    if impl != "pallas":
+        raise ValueError(f"unknown WKV impl {impl!r} (want pallas|xla)")
+    return _wkv_op(r, k, v, lw, u, state, chunk,
+                   _resolve_interpret(interpret))

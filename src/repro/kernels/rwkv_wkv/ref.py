@@ -1,0 +1,110 @@
+"""XLA reference twin of the chunked WKV kernel (DESIGN.md §12.1).
+
+The RWKV-6 recurrence per head (state S is dk × dv, lw = log decay ≤ 0):
+
+    S_t = diag(exp(lw_t)) S_{t-1} + k_t v_tᵀ
+    y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+
+Chunk-parallel form (GLA-style): within a chunk of C tokens with
+cumulative log decays L_t = Σ_{i≤t} lw_i,
+
+    y_t = (r_t ∘ e^{L_{t-1}}) @ S_0                       (inter-chunk)
+        + Σ_{s<t} (r_t · e^{L_{t-1}-L_s} ∘ k_s) v_s       (intra, masked)
+        + (r_t · u ∘ k_t) v_t                             (bonus diagonal)
+    S_C = e^{L_C} ∘ S_0 + Σ_s (e^{L_C-L_s} ∘ k_s) v_sᵀ
+
+The intra term is one masked (C × C) matmul; chunks of ≤16 keep every
+exp argument within fp32 range (|ΔL| ≤ 16·5 = 80 < 88, see
+``LOG_DECAY_MIN`` in `models/rwkv6.py`).
+
+Zero padding is exact in *both* the sequence tail and the head dim:
+padded positions carry lw = 0 (decay e⁰ = 1 — identity on S) and
+k = v = r = 0 (no kv outer product, no output contribution), so the
+final state of a padded sequence equals the final state of the
+unpadded one bit-for-bit — pinned by the property suite in
+`tests/test_rwkv_wkv.py`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WKV_CHUNK = 16  # |ΔL| ≤ 16·|LOG_DECAY_MIN| = 80 < 88 ⇒ exp stays finite
+
+
+def chunk_inputs(r, k, v, lw, chunk: int):
+    """Zero-pad S to a chunk multiple and reshape (B,S,H,D) inputs to
+    per-chunk scan operands (N, B, C, H, D).  Returns the operands plus
+    (n_chunks, pad)."""
+    b, s, h, d = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = z(r), z(k), z(v), z(lw)
+    n = r.shape[1] // chunk
+    resh = lambda a: a.reshape(b, n, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    return resh(r), resh(k), resh(v), resh(lw), n, pad
+
+
+def unchunk(a, b: int, s: int, h: int, d: int, chunk: int):
+    """(N, B, C, H, D) scan outputs back to (B, S, H, D), tail sliced."""
+    n = a.shape[0]
+    return a.transpose(1, 0, 2, 3, 4).reshape(b, n * chunk, h, d)[:, :s]
+
+
+def chunk_fwd(s0, rt, kt, vt, lwt, u):
+    """One chunk of the chunk-parallel WKV.  rt/kt/vt/lwt (B,C,H,D),
+    s0 (B,H,D,D), u (H,D) → (S_C, y (B,C,H,D))."""
+    cum = jnp.cumsum(lwt, axis=1)  # L_t (inclusive)
+    cum_prev = cum - lwt  # L_{t-1}
+    total = cum[:, -1:]  # L_C
+    # inter: y_t += (r_t · exp(L_{t-1})) @ S0
+    q = rt * jnp.exp(cum_prev)
+    y = jnp.einsum("bchd,bhde->bche", q, s0)
+    # intra: A[t,s] = Σ_d r_t exp(L_{t-1} − L_s) k_s  (s < t)
+    kd = kt * jnp.exp(total - cum)  # k_s · exp(L_C − L_s)
+    qd = rt * jnp.exp(cum_prev - total)  # r_t · exp(L_{t-1} − L_C)
+    scores = jnp.einsum("bthd,bshd->bhts", qd, kd)
+    mask = jnp.tril(jnp.ones((rt.shape[1], rt.shape[1]), bool), -1)
+    scores = jnp.where(mask[None, None], scores, 0.0)
+    y = y + jnp.einsum("bhts,bshe->bthe", scores, vt)
+    # diagonal (bonus u)
+    diag = jnp.einsum("bthd,hd,bthd->bth", rt, u, kt)
+    y = y + diag[..., None] * vt
+    # state: S_C = exp(L_C)·S0 + Σ_s exp(L_C − L_s) k_s v_s
+    s_new = jnp.exp(total[:, 0])[..., None] * s0 + jnp.einsum(
+        "bshd,bshe->bhde", kd, vt)
+    return s_new, y
+
+
+def wkv_chunked_ref(r, k, v, lw, u, state, chunk: int = WKV_CHUNK):
+    """Chunk-parallel WKV in plain XLA (exact vs the per-token scan up
+    to fp reassociation).  r/k/v/lw (B,S,H,D) f32; u (H,D);
+    state (B,H,D,D) → (y (B,S,H,D), final state)."""
+    b, s, h, d = r.shape
+    rc, kc, vc, lwc, n, pad = chunk_inputs(r, k, v, lw, chunk)
+
+    def step(s0, inp):
+        rt, kt, vt, lwt = inp
+        return chunk_fwd(s0, rt, kt, vt, lwt, u)
+
+    state, ys = jax.lax.scan(step, state, (rc, kc, vc, lwc))
+    return unchunk(ys, b, s, h, d, chunk), state
+
+
+def chunk_start_states(k, v, lw, state, chunk: int):
+    """Recompute every chunk's *entry* state with a state-only forward
+    scan — the cheap residual the closed-form backward needs (`ops.py`).
+    Returns (final state, per-chunk entry states (N,B,H,D,D))."""
+    _, kc, vc, lwc, _, _ = chunk_inputs(k, k, v, lw, chunk)
+
+    def step(s0, inp):
+        kt, vt, lwt = inp
+        cum = jnp.cumsum(lwt, axis=1)
+        total = cum[:, -1:]
+        kd = kt * jnp.exp(total - cum)
+        s_new = jnp.exp(total[:, 0])[..., None] * s0 + jnp.einsum(
+            "bshd,bshe->bhde", kd, vt)
+        return s_new, s0
+
+    return jax.lax.scan(step, state, (kc, vc, lwc))

@@ -45,6 +45,10 @@ class ModelConfig:
     rwkv_head_dim: int = 64
     rwkv_lora_dim: int = 64
     chunk_size: int = 128
+    # chunked-WKV backend: "pallas" (fused kernel + closed-form VJP,
+    # interpret-mode off-TPU), "xla" (chunked lax.scan twin), "naive"
+    # (per-token scan) — see kernels/rwkv_wkv and DESIGN.md §12
+    wkv_impl: str = "pallas"
     # execution
     dtype: Any = jnp.bfloat16
     scan_layers: bool = True

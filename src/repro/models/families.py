@@ -11,6 +11,7 @@ Every family exposes:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -100,6 +101,13 @@ class Family:
     decode: Callable
     init_decode_state: Callable
     batch_keys: tuple[str, ...]
+    # Optional fused multi-token prefill, (params, state, tokens (B,C),
+    # lengths (B,), cfg) → (last_logits (B,V), new_state): advance row b
+    # by lengths[b] ∈ [0, C] tokens in one launch, rows at 0 keeping
+    # their state bit-for-bit.  Only valid for positionless recurrent
+    # families (the hook takes no positions); serving's chunked prefill
+    # prefers it over the masked decode-step scan when present.
+    prefill: Callable | None = None
 
 
 FAMILIES: dict[str, Family] = {
@@ -108,7 +116,8 @@ FAMILIES: dict[str, Family] = {
     "moe": Family(transformer.init_lm, _lm_loss, transformer.decode_step,
                   _lm_decode_state, ("tokens", "targets")),
     "rwkv": Family(rwkv6.init_rwkv, _rwkv_loss, rwkv6.decode_step,
-                   _rwkv_decode_state, ("tokens", "targets")),
+                   _rwkv_decode_state, ("tokens", "targets"),
+                   prefill=rwkv6.prefill_step),
     "rglru": Family(rglru.init_rglru, _rglru_loss, rglru.decode_step,
                     _rglru_decode_state, ("tokens", "targets")),
     "vlm": Family(vlm.init_vlm, _vlm_loss, vlm.decode_step,
@@ -120,3 +129,29 @@ FAMILIES: dict[str, Family] = {
 
 def get_family(cfg: ModelConfig) -> Family:
     return FAMILIES[cfg.family]
+
+
+@functools.lru_cache(maxsize=None)
+def validate_slot_layout(cfg: ModelConfig) -> None:
+    """Serving's slot table assumes **batch at axis 1** of every
+    decode-state leaf (`ServeEngine._reset_slot` zeroes ``a[:, i]``, the
+    chunked step's ``keep`` select masks axis 1).  Check that against the
+    family's *declared* state layout (the logical-axes tree from
+    ``init_decode_state(..., abstract=True)``) and fail loudly on
+    mismatch — e.g. rglru's grouped ``rec_conv``/``rec_h`` leaves carry
+    batch at axis 2, which the slot engines would silently corrupt."""
+    family = get_family(cfg)
+    _, axes = family.init_decode_state(cfg, 1, 8, abstract=True)
+    is_axes = lambda x: isinstance(x, tuple)
+    bad = []
+    for path, ax in jax.tree_util.tree_flatten_with_path(
+            axes, is_leaf=is_axes)[0]:
+        if not is_axes(ax) or len(ax) < 2 or ax[1] != "cache_batch":
+            bad.append((jax.tree_util.keystr(path), ax))
+    if bad:
+        detail = ", ".join(f"{p} declares axes {ax}" for p, ax in bad)
+        raise ValueError(
+            f"family {cfg.family!r} decode state is incompatible with the "
+            f"slot engines: every leaf must declare 'cache_batch' at axis "
+            f"1, but {detail}. Serving this family needs a state-layout "
+            f"adapter, not a silent axis-1 select.")

@@ -23,6 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.rwkv_wkv import ops as wkv_ops
 from repro.models.config import ModelConfig
 from repro.models.init_utils import KeyGen, split_tree, make
 from repro.models.layers import (
@@ -126,47 +127,33 @@ def wkv_naive(r, k, v, lw, u, state):
     return ys.transpose(1, 0, 2, 3), state
 
 
-def wkv_chunked(r, k, v, lw, u, state, chunk: int = WKV_CHUNK):
-    """Chunk-parallel WKV (exact vs `wkv_naive` up to fp error)."""
-    b, s, h, d = r.shape
-    pad = (-s) % chunk
-    if pad:
-        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        r, k, v, lw = z(r), z(k), z(v), z(lw)
-    n = r.shape[1] // chunk
-    resh = lambda a: a.reshape(b, n, chunk, h, d).transpose(1, 0, 2, 3, 4)
-    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)
+def wkv_chunked(r, k, v, lw, u, state, chunk: int = WKV_CHUNK,
+                impl: str = "pallas"):
+    """Chunk-parallel WKV (exact vs `wkv_naive` up to fp error — output
+    *and* final state, pinned by the property suite in
+    `tests/test_rwkv_wkv.py` over random lengths/chunks/initial states).
 
-    def chunk_step(s0, inp):
-        rt, kt, vt, lwt = inp  # (B, C, H, D)
-        cum = jnp.cumsum(lwt, axis=1)  # L_t (inclusive)
-        cum_prev = cum - lwt  # L_{t-1}
-        total = cum[:, -1:]  # L_C
-        # inter: y_t += (r_t · exp(L_{t-1})) @ S0
-        q = rt * jnp.exp(cum_prev)
-        y = jnp.einsum("bchd,bhde->bche", q, s0)
-        # intra: A[t,s] = Σ_d r_t exp(L_{t-1} − L_s) k_s  (s < t)
-        kd = kt * jnp.exp(total - cum)  # k_s · exp(L_C − L_s)
-        qd = rt * jnp.exp(cum_prev - total)  # r_t · exp(L_{t-1} − L_C)
-        scores = jnp.einsum("bthd,bshd->bhts", qd, kd)
-        mask = jnp.tril(jnp.ones((rt.shape[1], rt.shape[1]), bool), -1)
-        scores = jnp.where(mask[None, None], scores, 0.0)
-        y = y + jnp.einsum("bhts,bshe->bthe", scores, vt)
-        # diagonal (bonus u)
-        diag = jnp.einsum("bthd,hd,bthd->bth", rt, u, kt)
-        y = y + diag[..., None] * vt
-        # state: S_C = exp(L_C)·S0 + Σ_s exp(L_C − L_s) k_s v_s
-        s_new = jnp.exp(total[:, 0])[..., None] * s0 + jnp.einsum(
-            "bshd,bshe->bhde", kd, vt)
-        return s_new, y
+    Dispatch (``impl`` = `ModelConfig.wkv_impl`): "pallas" runs the fused
+    kernel forward with its closed-form chunked VJP
+    (`kernels/rwkv_wkv/ops.py`, interpret-mode off-TPU); "xla" the
+    chunked ``lax.scan`` twin; "naive" the per-token scan."""
+    if impl == "naive":
+        return wkv_naive(r, k, v, lw, u, state)
+    return wkv_ops.wkv(r, k, v, lw, u, state, chunk=chunk, impl=impl)
 
-    state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, lwc))
-    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n * chunk, h, d)
-    return y[:, :s_orig] if (s_orig := s) != y.shape[1] else y, state
+
+def _last_active(x, lengths, prev_tok):
+    """Per-row shift state for a masked prefix: row b's last *active*
+    position (lengths[b] − 1), keeping the previous shift state when the
+    row advanced zero tokens."""
+    b, s = x.shape[:2]
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    gathered = x[jnp.arange(b), idx]
+    return jnp.where((lengths > 0)[:, None], gathered, prev_tok)
 
 
 def _time_mix(p: dict, x, prev_tok, wkv_state, cfg: ModelConfig, *,
-              chunked: bool = True):
+              chunked: bool = True, lengths=None):
     b, s, d = x.shape
     h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
     xx = _token_shift(x, prev_tok)
@@ -181,9 +168,20 @@ def _time_mix(p: dict, x, prev_tok, wkv_state, cfg: ModelConfig, *,
     lw = jnp.clip(-jnp.exp(omega.astype(jnp.float32)), LOG_DECAY_MIN, -1e-6)
 
     rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    if lengths is not None:
+        # Masked prefix (chunked serving prefill): positions ≥ lengths[b]
+        # carry lw = 0 (identity decay) and k = 0 (no kv update), so the
+        # WKV state update is exactly the identity there — inactive rows
+        # and the tail beyond a row's prompt leave the state untouched.
+        active = (jnp.arange(s)[None] < lengths[:, None])[..., None, None]
+        lw = jnp.where(active, lw, 0.0)
+        kf = jnp.where(active, kf, 0.0)
     u = p["u"].astype(jnp.float32)
-    fn = wkv_chunked if chunked else wkv_naive
-    y, wkv_state = fn(rf, kf, vf, lw, u, wkv_state)
+    if chunked:
+        y, wkv_state = wkv_chunked(rf, kf, vf, lw, u, wkv_state,
+                                   impl=cfg.wkv_impl)
+    else:
+        y, wkv_state = wkv_naive(rf, kf, vf, lw, u, wkv_state)
 
     # per-head GroupNorm
     mu = y.mean(-1, keepdims=True)
@@ -191,17 +189,21 @@ def _time_mix(p: dict, x, prev_tok, wkv_state, cfg: ModelConfig, *,
     y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
     y = y * p["gn_scale"][None, None] + p["gn_bias"][None, None]
     y = y.reshape(b, s, d).astype(x.dtype) * g
-    return y @ p["wo"], x[:, -1, :], wkv_state
+    shift = (x[:, -1, :] if lengths is None
+             else _last_active(x, lengths, prev_tok))
+    return y @ p["wo"], shift, wkv_state
 
 
-def _channel_mix(p: dict, x, prev_tok, cfg: ModelConfig):
+def _channel_mix(p: dict, x, prev_tok, cfg: ModelConfig, *, lengths=None):
     xx = _token_shift(x, prev_tok)
     streams = _ddlerp(p["mix"], x, xx, cfg)
     xr, xk = streams[:, :, 0], streams[:, :, 1]
     kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
     kk = shard(kk, "batch", "seq", "mlp_act")
     rr = jax.nn.sigmoid(xr @ p["wr"])
-    return rr * (kk @ p["wv"]), x[:, -1, :]
+    shift = (x[:, -1, :] if lengths is None
+             else _last_active(x, lengths, prev_tok))
+    return rr * (kk @ p["wv"]), shift
 
 
 def init_rwkv_state(cfg: ModelConfig, batch: int, *, abstract=False):
@@ -219,13 +221,15 @@ def init_rwkv_state(cfg: ModelConfig, batch: int, *, abstract=False):
     return split_tree(tree)
 
 
-def _layer(x, lp, state, cfg: ModelConfig, *, chunked=True):
+def _layer(x, lp, state, cfg: ModelConfig, *, chunked=True, lengths=None):
     h = apply_norm(lp["att_norm"], x, cfg)
     att, att_shift, wkv = _time_mix(lp["att"], h, state["att_shift"],
-                                    state["wkv"], cfg, chunked=chunked)
+                                    state["wkv"], cfg, chunked=chunked,
+                                    lengths=lengths)
     x = x + att.astype(x.dtype)
     h = apply_norm(lp["ffn_norm"], x, cfg)
-    ffn, ffn_shift = _channel_mix(lp["ffn"], h, state["ffn_shift"], cfg)
+    ffn, ffn_shift = _channel_mix(lp["ffn"], h, state["ffn_shift"], cfg,
+                                  lengths=lengths)
     x = shard(x + ffn.astype(x.dtype), "batch", "seq", "embed_act")
     new_state = {"att_shift": att_shift.astype(cfg.dtype),
                  "ffn_shift": ffn_shift.astype(cfg.dtype),
@@ -234,13 +238,20 @@ def _layer(x, lp, state, cfg: ModelConfig, *, chunked=True):
 
 
 def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
-            state: dict | None = None, *, chunked: bool = True):
-    """tokens (B,S) → (logits, aux=0, final_state)."""
+            state: dict | None = None, *, chunked: bool = True,
+            lengths: jax.Array | None = None):
+    """tokens (B,S) → (logits, aux=0, final_state).
+
+    ``lengths`` (B,) masks each row to an active prefix: positions ≥
+    lengths[b] are identity on the recurrent state (see `_time_mix`),
+    and the token-shift states advance to the last *active* position —
+    the masked-prefix contract `prefill_step` serves to the engine."""
     b, s = tokens.shape
     if state is None:
         state, _ = init_rwkv_state(cfg, b)
     x = embed_tokens(params["embed"], tokens, cfg)
-    layer_fn = functools.partial(_layer, cfg=cfg, chunked=chunked)
+    layer_fn = functools.partial(_layer, cfg=cfg, chunked=chunked,
+                                 lengths=lengths)
     if cfg.remat:
         layer_fn = jax.checkpoint(
             layer_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
@@ -269,3 +280,21 @@ def decode_step(params: dict, state: dict, tokens: jax.Array, pos: jax.Array,
     """One-token decode with O(1) state (pos unused — state is positionless)."""
     logits, _, new_state = forward(params, tokens, cfg, state, chunked=False)
     return logits, new_state
+
+
+def prefill_step(params: dict, state: dict, tokens: jax.Array,
+                 lengths: jax.Array, cfg: ModelConfig):
+    """Fused chunked prefill: advance row b by ``lengths[b] ∈ [0, C]``
+    tokens in ONE chunked forward (the family ``prefill`` hook serving's
+    `_chunk_step_for` prefers over C masked decode steps — valid because
+    rwkv state is positionless).  Rows with lengths[b] = 0 keep their
+    state bit-for-bit (identity masking, see `forward`).
+
+    Returns (last_logits (B, V) — each row's logits at its last active
+    position — and the advanced state)."""
+    b, c = tokens.shape
+    logits, _, new_state = forward(params, tokens, cfg, state, chunked=True,
+                                   lengths=lengths)
+    idx = jnp.clip(lengths - 1, 0, c - 1)
+    last = logits[jnp.arange(b), idx]
+    return last, new_state

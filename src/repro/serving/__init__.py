@@ -18,9 +18,11 @@ from repro.serving.faults import (
 )
 from repro.serving.engine import Request, ServeEngine, greedy_generate
 from repro.serving.pool import ReplicaPool
+from repro.serving.sessions import SessionEngine, SessionRequest
 from repro.serving.vision import VisionEngine, VisionRequest
 
 __all__ = ["Request", "ServeEngine", "greedy_generate",
+           "SessionEngine", "SessionRequest",
            "VisionEngine", "VisionRequest", "ReplicaPool",
            "ScheduledRequest", "SlotEngine",
            "EVICTION_POLICIES", "drop_newest", "drop_oldest",

@@ -12,10 +12,12 @@ continuous-batching trick.
 Prefill is token-by-token through the decode step by default (correct
 for all families incl. recurrent state models).  ``prefill_chunk=C``
 enables the chunked fast path: one shape-stable compiled chunk step
-advances every prefilling slot up to C prompt tokens per tick (a
-masked ``lax.scan`` over the same decode step, so outputs are
-token-identical — see ``_chunk_step_for``), collapsing C host⇄device
-round-trips and launch overheads into one.
+advances every prefilling slot up to C prompt tokens per tick,
+collapsing C host⇄device round-trips and launch overheads into one.
+Families that declare a fused ``prefill`` hook (rwkv: one chunked-WKV
+forward over the whole chunk, DESIGN.md §12) take it; the rest run a
+masked ``lax.scan`` over the decode step, token-identical to C
+separate launches — see ``_chunk_step_for``.
 
 Compiled steps are cached per config (``_decode_step_for`` /
 ``_chunk_step_for``), not constructed per call or per engine: repeated
@@ -30,9 +32,10 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
-from repro.models.families import get_family
+from repro.models.families import get_family, validate_slot_layout
 from repro.serving.scheduler import ScheduledRequest, SlotEngine
 
 
@@ -45,39 +48,87 @@ class Request(ScheduledRequest):
     done: bool = False
 
 
+def _slot_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    """Decode-state shardings for a mesh-backed engine: batch axis (1,
+    per `validate_slot_layout`) over the mesh's ``data`` axis, leaves
+    otherwise replicated.  The state stays device-resident and sharded
+    across ticks — tokens scatter, logits gather, the recurrent state
+    never moves."""
+    family = get_family(cfg)
+    state, _ = family.init_decode_state(cfg, batch, max_len, abstract=True)
+    spec = lambda a: NamedSharding(
+        mesh, P(*((None, "data") + (None,) * (a.ndim - 2))))
+    return jax.tree.map(spec, state)
+
+
+def _jit_step(fn, cfg, mesh, batch, max_len, n_vec_args):
+    """jit ``fn(params, state, tokens, *vec)`` — plain when mesh is None,
+    otherwise with explicit in/out shardings: params replicated, state
+    per `_slot_shardings`, every batch-leading operand split over
+    ``data``.  The state sharding is also the *out* sharding, so the
+    slot state round-trips device-resident without a per-tick reshard."""
+    if mesh is None:
+        return jax.jit(fn)
+    ss = _slot_shardings(cfg, mesh, batch, max_len)
+    rep = NamedSharding(mesh, P())
+    row = NamedSharding(mesh, P("data"))
+    return jax.jit(fn, in_shardings=(rep, ss) + (row,) * (1 + n_vec_args),
+                   out_shardings=(row, ss))
+
+
 @functools.lru_cache(maxsize=None)
-def _decode_step_for(cfg: ModelConfig):
-    """One-token decode step, jitted once per config.
+def _decode_step_for(cfg: ModelConfig, mesh=None, batch: int = 0,
+                     max_len: int = 0):
+    """One-token decode step, jitted once per (config, mesh).
 
     ``params`` rides as a traced argument (not a closure) so every
     caller — ``greedy_generate``, every ``ServeEngine`` on this config —
     shares one compilation.
     """
     family = get_family(cfg)
-    return jax.jit(
-        lambda params, state, tokens, pos: family.decode(
-            params, state, tokens, pos, cfg))
+
+    def run(params, state, tokens, pos):
+        logits, state = family.decode(params, state, tokens, pos, cfg)
+        return logits[:, -1], state
+
+    return _jit_step(run, cfg, mesh, batch, max_len, 1)
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_step_for(cfg: ModelConfig, chunk: int):
+def _chunk_step_for(cfg: ModelConfig, chunk: int, mesh=None, batch: int = 0,
+                    max_len: int = 0):
     """Shape-stable chunked-prefill step: advance slot ``i`` by
     ``n_active[i] ∈ [0, chunk]`` tokens in one compiled launch.
 
-    A masked ``lax.scan`` over the single-token decode step: at scan
-    index ``j`` a slot participates iff ``j < n_active[i]``; inactive
-    slots' state and position are carried through unchanged (the
-    ``where``-select makes the masked step the identity, so results are
-    token-identical to ``chunk`` separate decode launches).  The select
-    touches the whole decode-state tree per scan step — fine for the
-    modest chunk sizes serving uses; the payoff is one launch and one
-    host sync per tick instead of ``chunk``.
+    Two implementations behind one signature
+    ``(params, state, tokens (B,C), pos, n_active) → (last_logits, state)``:
+
+    * **Family prefill hook** (rwkv): ONE fused chunked forward over all
+      C positions — the Pallas WKV kernel eats the whole chunk in a
+      masked-prefix forward (`models/rwkv6.py::prefill_step`), no
+      per-token scan at all.  Positionless families only.
+    * **Masked decode scan** (KV-cache families): a ``lax.scan`` over
+      the single-token decode step where slot i participates at scan
+      index ``j`` iff ``j < n_active[i]``; the ``where``-select makes
+      the masked step the identity, so results are token-identical to
+      ``chunk`` separate decode launches.
+
+    Both assume batch at axis 1 of every state leaf — validated against
+    the family's declared layout (`validate_slot_layout`), not assumed.
 
     Returns ``(last_logits, new_state)`` where ``last_logits[i]`` is the
     logits row from slot i's final *active* step — the row the engine
     samples the next token from.
     """
     family = get_family(cfg)
+    validate_slot_layout(cfg)
+
+    if family.prefill is not None:
+        def run(params, state, tokens, pos, n_active):
+            del pos  # prefill hook ⇒ positionless state
+            return family.prefill(params, state, tokens, n_active, cfg)
+
+        return _jit_step(run, cfg, mesh, batch, max_len, 2)
 
     def run(params, state, tokens, pos, n_active):
         # tokens (B, C) int32; pos, n_active (B,) int32
@@ -88,7 +139,7 @@ def _chunk_step_for(cfg: ModelConfig, chunk: int):
             logits, new_state = family.decode(params, state, tok[:, None],
                                               pos, cfg)
 
-            def keep(new, old):  # batch axis is axis 1 in every state tree
+            def keep(new, old):  # batch axis 1 — see validate_slot_layout
                 m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
                 return jnp.where(m, new, old)
 
@@ -103,15 +154,23 @@ def _chunk_step_for(cfg: ModelConfig, chunk: int):
         last = outs[idx, jnp.arange(tokens.shape[0])]
         return last, state
 
-    return jax.jit(run)
+    return _jit_step(run, cfg, mesh, batch, max_len, 2)
 
 
 def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array,
                     steps: int, max_len: int | None = None,
-                    eos_id: int | None = None):
+                    eos_id: int | None = None,
+                    prefill_chunk: int | None = None):
     """Simple batched greedy decode (no slot management).
 
     prompts: (B, P) int32.  Returns (B, steps) generated tokens.
+
+    Prefill routes through the shared chunked step (`_chunk_step_for`):
+    ``prefill_chunk=None`` (default) eats the whole prompt in
+    ⌈P/C⌉ = 1 launch; an explicit C prefills C tokens per launch;
+    ``prefill_chunk=1`` keeps the legacy token-by-token loop (one host
+    sync per prompt token) — the reference the chunked path is pinned
+    token-identical to in `tests/test_serving.py`.
     """
     family = get_family(cfg)
     b, p = prompts.shape
@@ -119,17 +178,30 @@ def greedy_generate(params, cfg: ModelConfig, prompts: jax.Array,
     state, _ = family.init_decode_state(cfg, b, max_len)
     step_fn = _decode_step_for(cfg)
 
-    logits = None
-    for t in range(p):
-        logits, state = step_fn(params, state, prompts[:, t : t + 1],
-                                jnp.full((b,), t, jnp.int32))
+    c = p if prefill_chunk is None else min(prefill_chunk, p)
+    if c > 1:
+        chunk_fn = _chunk_step_for(cfg, c)
+        prompts_np = np.asarray(prompts, np.int32)
+        last = None
+        for off in range(0, p, c):
+            n = min(c, p - off)
+            block = np.zeros((b, c), np.int32)
+            block[:, :n] = prompts_np[:, off:off + n]
+            last, state = chunk_fn(params, state, jnp.asarray(block),
+                                   jnp.full((b,), off, jnp.int32),
+                                   jnp.full((b,), n, jnp.int32))
+    else:
+        last = None
+        for t in range(p):
+            last, state = step_fn(params, state, prompts[:, t : t + 1],
+                                  jnp.full((b,), t, jnp.int32))
     out = []
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
     for i in range(steps):
         out.append(tok[:, 0])
-        logits, state = step_fn(params, state, tok,
-                                jnp.full((b,), p + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        last, state = step_fn(params, state, tok,
+                              jnp.full((b,), p + i, jnp.int32))
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
     return jnp.stack(out, axis=1)
 
 
@@ -148,14 +220,20 @@ class ServeEngine(SlotEngine):
                  max_len: int = 2048, eos_id: int | None = None,
                  pad_id: int = 0, prefill_chunk: int = 1,
                  max_queue: int | None = None,
-                 evict: str = "drop-newest", **core):
+                 evict: str = "drop-newest", mesh=None, **core):
         """``core`` forwards the scheduler's fault-tolerance knobs
         (``admission`` / ``max_serve_ticks`` / ``launch_retries`` /
         ``faults`` — DESIGN.md §10) and the event-driven front door's
         cadence declaration (``tick_cost`` — an LM prefill/decode launch
         is the heaviest tick in a mixed door, so LM engines typically
-        declare the largest cost, DESIGN.md §11) to `SlotEngine`."""
+        declare the largest cost, DESIGN.md §11) to `SlotEngine`.
+
+        ``mesh`` shards the slot table over the mesh's ``data`` axis:
+        decode state lives device-resident and sharded across ticks
+        (`_slot_shardings`); requires ``max_batch`` divisible by the
+        data-axis size."""
         super().__init__(max_batch, max_queue=max_queue, evict=evict, **core)
+        validate_slot_layout(cfg)  # slot ops assume batch at state axis 1
         self.cfg = cfg
         self.params = params
         self.family = get_family(cfg)
@@ -163,10 +241,18 @@ class ServeEngine(SlotEngine):
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
         self.state, _ = self.family.init_decode_state(cfg, max_batch, max_len)
-        self._step = _decode_step_for(cfg)
-        self._chunk_step = (_chunk_step_for(cfg, prefill_chunk)
-                            if prefill_chunk > 1 else None)
+        if mesh is not None:
+            if max_batch % mesh.shape["data"]:
+                raise ValueError(f"max_batch={max_batch} must divide over "
+                                 f"the data axis ({mesh.shape['data']})")
+            self.state = jax.device_put(
+                self.state, _slot_shardings(cfg, mesh, max_batch, max_len))
+        self._step = _decode_step_for(cfg, mesh, max_batch, max_len)
+        self._chunk_step = (
+            _chunk_step_for(cfg, prefill_chunk, mesh, max_batch, max_len)
+            if prefill_chunk > 1 else None)
         self._slot_pos = np.zeros(max_batch, np.int64)
         self._slot_cursor = np.zeros(max_batch, np.int64)  # prompt cursor
 
@@ -183,6 +269,15 @@ class ServeEngine(SlotEngine):
         self._slot_pos[i] = 0
         self._slot_cursor[i] = 0
 
+    # Per-request accessors the stateful session engine overrides
+    # (`serving/sessions.py`): which token list is being prefilled and
+    # which one generation appends to.
+    def _prompt(self, req) -> list[int]:
+        return req.prompt
+
+    def _gen(self, req) -> list[int]:
+        return req.output
+
     def _launch(self, active):
         """One decode (or chunked-prefill) launch over the slot table.
 
@@ -196,14 +291,16 @@ class ServeEngine(SlotEngine):
         adv = np.zeros(b, np.int32)
         for i, req in active:
             cur = int(self._slot_cursor[i])
-            remaining = len(req.prompt) - cur
+            prompt = self._prompt(req)
+            remaining = len(prompt) - cur
             if remaining > 0:  # prefilling: up to C prompt tokens
                 n = min(c, remaining)
-                tokens[i, :n] = req.prompt[cur:cur + n]
+                tokens[i, :n] = prompt[cur:cur + n]
             else:  # generating: one token per tick, feed last output
                 n = 1
-                if req.output:
-                    tokens[i, 0] = req.output[-1]
+                out = self._gen(req)
+                if out:
+                    tokens[i, 0] = out[-1]
             pos[i] = self._slot_pos[i]
             adv[i] = n
 
@@ -214,10 +311,9 @@ class ServeEngine(SlotEngine):
         else:
             # Pure-decode tick (every slot advancing ≤1 token): the plain
             # one-token step — no point scanning C-1 masked identity steps.
-            logits, self.state = self._step(self.params, self.state,
-                                            jnp.asarray(tokens[:, :1]),
-                                            jnp.asarray(pos))
-            last = logits[:, -1]
+            last, self.state = self._step(self.params, self.state,
+                                          jnp.asarray(tokens[:, :1]),
+                                          jnp.asarray(pos))
         nxt = np.asarray(jax.device_get(jnp.argmax(last, axis=-1)))
         return nxt, adv
 
@@ -233,12 +329,13 @@ class ServeEngine(SlotEngine):
         n = int(adv[i])
         self._slot_pos[i] += n
         cur = int(self._slot_cursor[i])
-        if cur < len(req.prompt):
+        prompt = self._prompt(req)
+        if cur < len(prompt):
             self._slot_cursor[i] = cur + n
-            if cur + n < len(req.prompt):
+            if cur + n < len(prompt):
                 return False  # prompt not consumed yet; nothing to emit
         tok = int(nxt[i])
-        req.output.append(tok)
+        self._gen(req).append(tok)
         if (self.eos_id is not None and tok == self.eos_id) or \
                 len(req.output) >= req.max_new_tokens or \
                 self._slot_pos[i] >= self.max_len - 1:

@@ -1,3 +1,4 @@
+import jax
 import numpy as np
 import pytest
 
@@ -5,3 +6,23 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_memory_maps():
+    """Drop compiled executables between test modules.
+
+    Every XLA-CPU compile mmaps several regions for its jitted code and
+    keeps them for the life of the cache entry.  The full suite performs
+    enough distinct compiles that a single pytest process crosses the
+    kernel's default ``vm.max_map_count`` (65530) near the end of the
+    run, and the *next* compile segfaults inside LLVM when mmap fails —
+    deterministically, in whichever test file happens to sit past the
+    ceiling alphabetically.  Clearing JAX's caches at module boundaries
+    returns those maps (measured: ~65k maps at the crash point without
+    this fixture; bounded well under the ceiling with it) at the cost of
+    recompiling whatever a later module would have shared — little,
+    since modules mostly use distinct configs.
+    """
+    yield
+    jax.clear_caches()

@@ -161,3 +161,36 @@ def test_greedy_generate_shape():
     out = greedy_generate(params, cfg, prompts, steps=4, max_len=32)
     assert out.shape == (2, 4)
     assert int(out.max()) < cfg.padded_vocab
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-3b"])
+def test_greedy_generate_chunked_prefill_token_identical(arch):
+    """`greedy_generate` prefill now routes through the shared chunked
+    step (whole prompt in ⌈P/C⌉ launches).  Every chunking — including
+    the rwkv fused-WKV prefill hook — must emit exactly the tokens the
+    legacy token-by-token loop (prefill_chunk=1) emits."""
+    cfg, family, params = _setup(arch)
+    rng = np.random.default_rng(7)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (3, 7)), jnp.int32)
+    ref = np.asarray(greedy_generate(params, cfg, prompts, steps=5,
+                                     max_len=64, prefill_chunk=1))
+    for chunk in (3, 7, None):  # partial tail, exact, single launch
+        out = np.asarray(greedy_generate(params, cfg, prompts, steps=5,
+                                         max_len=64, prefill_chunk=chunk))
+        np.testing.assert_array_equal(out, ref, err_msg=f"chunk={chunk}")
+
+
+def test_slot_layout_validation_rejects_rglru():
+    """Satellite guard: the chunked step's `keep` select and
+    `_reset_slot` assume batch at axis 1 of every decode-state leaf.
+    rglru declares batch at axis 2 for its grouped recurrent leaves —
+    engines must refuse it loudly, not silently corrupt slots."""
+    from repro.models.families import validate_slot_layout
+
+    cfg = get_smoke_config("recurrentgemma-9b").replace(dtype=jnp.float32)
+    with pytest.raises(ValueError, match="cache_batch"):
+        validate_slot_layout(cfg)
+    family = get_family(cfg)
+    params, _ = family.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="cache_batch"):
+        ServeEngine(params, cfg, max_batch=1, max_len=16)

@@ -1,0 +1,274 @@
+"""Stateful streaming-LM sessions: multi-turn slot residency.
+
+A `SessionRequest` holds its slot for the whole conversation and the
+recurrent (token-shift, WKV) state rides in the slot's batch row across
+turns.  The executable spec is single-request decode with a persistent
+state: feed turn t's prompt token by token, generate, then feed turn
+t+1's prompt into the SAME state (the final generated token of a turn is
+recorded but never fed back).  Everything here pins the engine — turn
+bookkeeping, chunked prefill, slot recycling, front-door routing, and
+the 8-device sharded lane — to that spec (DESIGN.md §12.4).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.families import get_family
+from repro.serving import Request, ServeEngine, SessionEngine, SessionRequest
+
+
+def _setup():
+    cfg = get_smoke_config("rwkv6-3b").replace(dtype=jnp.float32)
+    family = get_family(cfg)
+    params, _ = family.init(jax.random.PRNGKey(0), cfg)
+    return cfg, family, params
+
+
+def _turns(rng, cfg, n_turns, lo=3, hi=8):
+    return [rng.integers(0, cfg.vocab, rng.integers(lo, hi)).tolist()
+            for _ in range(n_turns)]
+
+
+def _reference_session(params, cfg, family, turns, max_new):
+    """Single-session greedy replay: persistent state, per-token feed.
+    Returns per-turn outputs."""
+    state, _ = family.init_decode_state(cfg, 1, 256)
+    pos = jnp.zeros((1,), jnp.int32)  # rwkv ignores positions
+    outs = []
+    logits = None
+    for prompt in turns:
+        for tok in prompt:
+            logits, state = family.decode(
+                params, state, jnp.asarray([[tok]], jnp.int32), pos, cfg)
+        gen = []
+        for i in range(max_new):
+            nxt = int(jnp.argmax(logits[0, -1]))
+            gen.append(nxt)
+            if i + 1 < max_new:  # a turn's last token is never fed back
+                logits, state = family.decode(
+                    params, state, jnp.asarray([[nxt]], jnp.int32), pos, cfg)
+        outs.append(gen)
+    return outs
+
+
+@pytest.mark.parametrize("prefill_chunk", [1, 4])
+def test_sessions_match_persistent_state_reference(prefill_chunk):
+    """Turn t+1 must continue from turn t's state — for both the
+    token-by-token and the fused chunked-WKV prefill paths."""
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(0)
+    all_turns = [_turns(rng, cfg, 3) for _ in range(3)]
+
+    eng = SessionEngine(params, cfg, max_batch=2, max_len=256,
+                        prefill_chunk=prefill_chunk)
+    reqs = [SessionRequest(uid=i, turns=t, max_new_tokens=5)
+            for i, t in enumerate(all_turns)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    for r in reqs:
+        ref = _reference_session(params, cfg, family, r.turns, 5)
+        assert r.outputs == ref, f"session {r.uid} diverged from reference"
+        assert r.done
+
+
+def test_state_actually_persists_across_turns():
+    """Sanity on the spec itself: turn 2 decoded with the session's
+    carried state must differ from turn 2 decoded fresh — otherwise the
+    'stateful' in stateful sessions is vacuous for this config."""
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(1)
+    turns = _turns(rng, cfg, 2, lo=6, hi=10)
+
+    eng = SessionEngine(params, cfg, max_batch=1, max_len=256,
+                        prefill_chunk=4)
+    req = SessionRequest(uid=0, turns=turns, max_new_tokens=6)
+    eng.submit(req)
+    eng.run()
+    fresh = _reference_session(params, cfg, family, [turns[1]], 6)[0]
+    assert req.outputs[1] != fresh, (
+        "turn-2 output identical to fresh-state decode — session state "
+        "is not being carried")
+
+
+def test_recycled_slot_sees_no_stale_session_state():
+    """PR-4 leak property, session flavor: a slot freed by one
+    conversation and re-admitted by another must behave as freshly
+    initialized even after worst-case poisoning of the engine state.
+    Recurrent state is the sharp case — a leaked WKV matrix feeds every
+    subsequent token of the next conversation."""
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(2)
+    t1, t2 = _turns(rng, cfg, 2), _turns(rng, cfg, 2)
+
+    eng = SessionEngine(params, cfg, max_batch=1, max_len=256,
+                        prefill_chunk=4)
+    eng.submit(SessionRequest(uid=0, turns=t1, max_new_tokens=4))
+    eng.run()
+    assert len(eng.completed) == 1
+
+    # worst-case stale state: saturate every slot's recurrent state
+    eng.state = jax.tree.map(lambda a: jnp.full_like(a, 7.0), eng.state)
+
+    req2 = SessionRequest(uid=1, turns=t2, max_new_tokens=4)
+    eng.submit(req2)
+    eng.run()
+    ref = _reference_session(params, cfg, family, t2, 4)
+    assert req2.outputs == ref, (
+        "recycled slot leaked previous conversation's WKV state")
+
+
+def test_more_sessions_than_slots():
+    """Sessions queue and recycle like any slot request; every
+    conversation completes all its turns."""
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(3)
+    eng = SessionEngine(params, cfg, max_batch=2, max_len=256,
+                        prefill_chunk=4)
+    reqs = [SessionRequest(uid=i, turns=_turns(rng, cfg, 2),
+                           max_new_tokens=3) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(r.uid for r in done) == list(range(5))
+    assert all(len(r.outputs) == 2 for r in reqs)
+    assert all(len(o) == 3 for r in reqs for o in r.outputs)
+
+
+def test_session_length_cap_ends_conversation():
+    """A conversation that would outrun the slot's max_len stops at the
+    hard cap instead of wrapping or crashing the tick."""
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(4)
+    eng = SessionEngine(params, cfg, max_batch=1, max_len=16,
+                        prefill_chunk=4)
+    req = SessionRequest(uid=0, turns=_turns(rng, cfg, 8),
+                         max_new_tokens=4)
+    eng.submit(req)
+    done = eng.run()
+    assert len(done) == 1 and req.done
+    assert len(req.outputs) < 8  # capped before the last turn
+
+
+def test_session_engine_rejects_kv_cache_family():
+    """KV-cache families have no positionless prefill hook — per-session
+    history in a recycled slot is unsound, so construction fails loudly."""
+    cfg = get_smoke_config("llama3.2-1b").replace(dtype=jnp.float32)
+    family = get_family(cfg)
+    params, _ = family.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="prefill"):
+        SessionEngine(params, cfg, max_batch=1, max_len=32)
+
+
+def test_front_door_routes_sessions_next_to_lm():
+    """SessionRequest routes to the SessionEngine while plain Request
+    still lands on the LM engine — mixed traffic, one merged completion
+    stream, no router changes."""
+    from repro.launch.serve import FrontDoor
+
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(5)
+    lm = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    chat = SessionEngine(params, cfg, max_batch=1, max_len=256,
+                         prefill_chunk=4)
+    door = FrontDoor(lm=lm, chat=chat)
+
+    reqs = [Request(uid=0, prompt=rng.integers(0, cfg.vocab, 4).tolist(),
+                    max_new_tokens=3),
+            SessionRequest(uid=100, turns=_turns(rng, cfg, 2),
+                           max_new_tokens=3)]
+    merged = door.run(reqs)
+    names = sorted(n for n, _ in merged)
+    assert names == ["chat", "lm"]
+    (sreq,) = [r for n, r in merged if n == "chat"]
+    assert sreq.done and len(sreq.outputs) == 2
+
+
+def test_session_replay_is_deterministic():
+    """Same conversations submitted twice through fresh engines produce
+    identical per-turn outputs and identical tick counts — the property
+    `bench_gate.py` gates on the bench row."""
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(6)
+    all_turns = [_turns(rng, cfg, 2) for _ in range(3)]
+
+    runs = []
+    for _ in range(2):
+        eng = SessionEngine(params, cfg, max_batch=2, max_len=256,
+                            prefill_chunk=4)
+        reqs = [SessionRequest(uid=i, turns=[list(t) for t in ts],
+                               max_new_tokens=4)
+                for i, ts in enumerate(all_turns)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        runs.append(([r.outputs for r in reqs], eng.tick))
+    assert runs[0] == runs[1], "session replay nondeterministic"
+
+
+# ----------------------------- multi-device lane (scripts/ci.sh re-runs
+# this file under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 virtual devices (CI multi-device lane)")
+
+
+@needs8
+def test_sharded_sessions_match_single_device_bitwise():
+    """Satellite 4: session state sharded over the 8-device data mesh —
+    resident across ticks, never gathered to host between turns — must
+    match the single-device engine *bitwise* (token ids equal, final
+    recurrent state array_equal).  The per-tick step is deterministic
+    given its inputs, and sharding the batch axis must not change any
+    per-row reduction order, so exact equality is the right bar."""
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(7)
+    all_turns = [_turns(rng, cfg, 2) for _ in range(8)]
+
+    def run(mesh):
+        eng = SessionEngine(params, cfg, max_batch=8, max_len=256,
+                            prefill_chunk=4, mesh=mesh)
+        reqs = [SessionRequest(uid=i, turns=[list(t) for t in ts],
+                               max_new_tokens=4)
+                for i, ts in enumerate(all_turns)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.outputs for r in reqs], eng.state
+
+    outs_1, state_1 = run(None)
+    outs_8, state_8 = run(make_debug_mesh(8))
+    assert outs_8 == outs_1, "sharded session tokens diverged"
+    for a, b in zip(jax.tree.leaves(state_1), jax.tree.leaves(state_8)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@needs8
+def test_sharded_recycled_slot_no_leak():
+    """Leak property on the sharded lane: device-resident sharded state
+    must still be zeroed on recycle — `_reset_slot`'s host-side zero-fill
+    and the device_put round-trip may not silently skip shards."""
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg, family, params = _setup()
+    rng = np.random.default_rng(8)
+    t1 = [_turns(rng, cfg, 2) for _ in range(8)]
+    t2 = _turns(rng, cfg, 2)
+
+    eng = SessionEngine(params, cfg, max_batch=8, max_len=256,
+                        prefill_chunk=4, mesh=make_debug_mesh(8))
+    for i, ts in enumerate(t1):
+        eng.submit(SessionRequest(uid=i, turns=ts, max_new_tokens=3))
+    eng.run()
+    eng.state = jax.tree.map(lambda a: jnp.full_like(a, 7.0), eng.state)
+    req = SessionRequest(uid=99, turns=t2, max_new_tokens=3)
+    eng.submit(req)
+    eng.run()
+    ref = _reference_session(params, cfg, family, t2, 3)
+    assert req.outputs == ref, "sharded recycled slot leaked state"
