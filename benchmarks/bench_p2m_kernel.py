@@ -32,6 +32,7 @@ from repro.core.adc import ADCConfig
 from repro.core.p2m_conv import extract_patches
 from repro.core.pixel_model import default_pixel_model, prune_pixel_model
 from repro.kernels.p2m_conv import (
+    p2m_conv,
     p2m_conv_jnp,
     p2m_conv_pallas,
     p2m_matmul,
@@ -197,9 +198,119 @@ def _run_bwd_cases(model, *, smoke: bool) -> None:
              speedup_vs_jaxvjp=t_old / t_new, M=m, K=k, N=n)
 
 
+def _bitwise(a, b) -> float:
+    return float(np.array_equal(np.asarray(a), np.asarray(b)))
+
+
+def _run_pipelined_parity(model, *, smoke: bool) -> None:
+    """Explicit double-buffered DMA ring (DESIGN.md §3.5) vs the automatic
+    grid pipeline: bitwise parity of forward + both gradients, gated at
+    1.0.  The parity geometry stays small everywhere (the claim is exact,
+    not a timing); on TPU the timing comparison also runs at paper size
+    via the autotuner's depth axis (`hillclimb.py --p2m-blocks`)."""
+    on_tpu = jax.default_backend() == "tpu"
+    name = "p2m_conv_pipelined_smoke" if smoke else "p2m_conv_pipelined_full"
+    b, h, w_dim, c, k, s = (1, 40, 40, 3, 5, 5) if smoke else (2, 64, 64, 3, 5, 5)
+    imgs, w, sh = _conv_data(b, h, w_dim, c, k)
+
+    def loss(depth):
+        def f(imgs, w, sh):
+            out = p2m_conv(imgs, w, sh, model, ADC, "relu", k, s,
+                           not on_tpu, None, depth)
+            return (out * out).sum()
+        return jax.jit(jax.grad(f, argnums=(0, 1)))
+
+    coeffs = _coeff_tuple(model)
+    fwd = {}
+    for depth in (0, 2):
+        fwd[depth] = p2m_conv_pallas(imgs, w, sh, kernel=k, stride=s,
+                                     coeffs=coeffs, mode="quant",
+                                     pipeline_depth=depth,
+                                     interpret=not on_tpu)
+    dimg0, dw0 = loss(0)(imgs, w, sh)
+    dimg2, dw2 = loss(2)(imgs, w, sh)
+    t_pipe = timeit(loss(2), imgs, w, sh, warmup=1, iters=2)
+    emit(name, t_pipe,
+         "explicit DMA-ring depth=2 vs grid pipeline: bitwise fwd+grads",
+         fwd_parity=_bitwise(fwd[0], fwd[2]),
+         dimg_parity=_bitwise(dimg0, dimg2),
+         dw_parity=_bitwise(dw0, dw2),
+         pipeline_depth=2, interpret=not on_tpu,
+         B=b, H=h, W=w_dim, C=c, k=k, s=s)
+
+
+def _run_gated_stem(model, *, smoke: bool) -> None:
+    """Fused delta-gated stem (DESIGN.md §3.6) vs the where-select
+    reference on a hold=2 synthetic stream: bit-identical detections
+    (gated at 1.0), in-kernel stem-FLOPs-skipped ratio vs the stream's
+    hold fraction (≥ 1.0), and ticks/s both ways.  Frame counts are
+    machine-independent; the ticks ratio is informational (interpret-mode
+    gating on CPU measures the Python interpreter, and the row says so)."""
+    from repro.models.mobilenetv2 import MNV2Config, init_mnv2
+    from repro.video import (DeltaGateConfig, DetectConfig, StreamEngine,
+                             StreamRequest, SyntheticVideo, init_detect_head)
+
+    on_tpu = jax.default_backend() == "tpu"
+    name = "p2m_gated_stem_smoke" if smoke else "p2m_gated_stem_full"
+    cfg = MNV2Config(variant="p2m", image_size=20, width=0.25,
+                     head_channels=16)
+    dcfg = DetectConfig(head_channels=8, max_dets=4)
+    params, bn = init_mnv2(jax.random.PRNGKey(0), cfg)
+    det = init_detect_head(jax.random.PRNGKey(1), 16, dcfg)
+    n_frames, hold = (6, 2) if smoke else (10, 2)
+    hold_fraction = 1.0 - 1.0 / hold  # noise=0: exactly this many held
+
+    def streams():
+        return [StreamRequest(
+            uid=i, frames=SyntheticVideo(image_size=cfg.image_size,
+                                         n_frames=n_frames, hold=hold,
+                                         seed=i).frames())
+            for i in range(3)]
+
+    def engine(**kw):
+        return StreamEngine(params, bn, cfg, det, det_cfg=dcfg,
+                            gate=DeltaGateConfig(threshold=0.0),
+                            max_streams=2, **kw)
+
+    import time
+
+    def run_timed(**kw):
+        eng = engine(**kw)
+        t0 = time.perf_counter()
+        done = eng.run(streams())
+        return eng, done, time.perf_counter() - t0
+
+    # warm the jit caches once per path so the timing is steady-state
+    run_timed(stem_path="gated")
+    run_timed(stem_path="where", stem_impl="pallas")
+    eng_g, done_g, wall_g = run_timed(stem_path="gated")
+    eng_w, done_w, wall_w = run_timed(stem_path="where", stem_impl="pallas")
+
+    parity = 1.0
+    for g, w in zip(done_g, done_w):
+        for (bg, sg), (bw, sw) in zip(g.frame_outputs, w.frame_outputs):
+            parity *= _bitwise(bg, bw) * _bitwise(sg, sw)
+    skipped = eng_g.stream_summary()["stem_flops_skipped_ratio"]
+    ticks = sum(r.frames_done for r in done_g)
+    emit(name, wall_g / ticks * 1e6,
+         f"fused in-kernel gate vs where-select: parity={parity:.0f}, "
+         f"skipped {skipped:.2f} of stem FLOPs (hold fraction "
+         f"{hold_fraction:.2f})",
+         gated_stem_parity=parity,
+         stem_flops_skipped_ratio=skipped,
+         hold_fraction=hold_fraction,
+         skip_vs_hold=skipped / hold_fraction if hold_fraction else 0.0,
+         ticks_per_s_gated=ticks / wall_g,
+         ticks_per_s_where=ticks / wall_w,
+         speedup_vs_where=wall_w / wall_g,
+         interpret=not on_tpu)
+
+
 def run(smoke: bool = False) -> None:
     model = default_pixel_model()
     _run_matmul_cases(model, smoke=smoke)
     _run_conv_cases(model, smoke=smoke)
     _run_bwd_cases(model, smoke=smoke)
+    _run_pipelined_parity(model, smoke=smoke)
+    _run_gated_stem(model, smoke=smoke)
     write_json(BENCH_SMOKE_JSON if smoke else BENCH_JSON, prefix="p2m_")

@@ -31,9 +31,20 @@ def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
     ``extra`` keyword fields (shapes, speedups, flags) land in the JSON
     written by :func:`write_json` but are not printed, keeping the CSV
     contract for existing consumers.
+
+    Every row carries provenance: ``backend`` (jax backend the numbers
+    were produced on), ``platform`` (host OS/arch), and ``interpret``
+    (True when the timed kernel ran in Pallas interpret mode — such a
+    number measures the Python interpreter, and `scripts/bench_gate.py`
+    refuses to compare it across backend/interpret boundaries).  Callers
+    may override any of the three, e.g. ``interpret=True`` on
+    interpret-mode kernel rows.
     """
-    ROWS.append({"name": name, "us_per_call": us_per_call,
-                 "derived": derived, **extra})
+    row = {"name": name, "us_per_call": us_per_call, "derived": derived,
+           "backend": jax.default_backend(), "platform": platform.platform(),
+           "interpret": False}
+    row.update(extra)
+    ROWS.append(row)
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

@@ -133,10 +133,12 @@ def p2m_block_hillclimb() -> None:
                                       iters=3 if on_tpu else 1)
         print(f"p2m_matmul M={m} K={k} N={n} -> blocks {best}")
     for b, h, w, c, n, kk, s in conv_sigs:
-        best = tune.get_conv_blocks(b, h, w, c, n, kk, s, coeffs, "quant",
-                                    enable=True, interpret=not on_tpu,
-                                    iters=3 if on_tpu else 1)
-        print(f"p2m_conv B={b} {h}x{w}x{c} k={kk} s={s} -> blocks {best}")
+        bh, bn, depth = tune.get_conv_blocks(b, h, w, c, n, kk, s, coeffs,
+                                             "quant", enable=True,
+                                             interpret=not on_tpu,
+                                             iters=3 if on_tpu else 1)
+        print(f"p2m_conv B={b} {h}x{w}x{c} k={kk} s={s} -> "
+              f"blocks (bh={bh}, bn={bn}, pipeline_depth={depth})")
 
     out = Path(__file__).resolve().parent / "results" / "p2m_blocks.json"
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -13,6 +13,15 @@ real regression (fused path silently falling back to patch
 materialization, the custom VJP re-differentiating the forward) craters
 these ratios by far more than CI timing noise moves them.
 
+Backend provenance: every row carries ``backend``/``platform``/
+``interpret`` fields (benchmarks/common.py).  Baseline-relative
+comparisons only run between SAME-backend, same-interpret row pairs —
+an interpret-mode CPU number against a TPU number (or vice versa) is
+not a regression signal, so mismatched pairs are skipped with a
+warning.  Absolute floors (counts and exact ratios) are
+machine-independent and always gate.  Old baseline rows without per-row
+fields inherit the file-level ``meta.backend``.
+
 Skip with REPRO_BENCH_GATE=0 (e.g. on a loaded laptop).
 """
 from __future__ import annotations
@@ -121,6 +130,27 @@ GATES: dict[str, list[tuple[str | None, str, float]]] = {
          (None, "deterministic_replay", 1.0),
          (None, "tokenwise_parity", 1.0),
          (None, "prefill_tick_speedup", 1.2)],
+    # Pipelined double-buffered conv kernel (DESIGN.md §3.5): exact
+    # 0-or-1 bitwise checks of the explicit DMA-ring path against the
+    # automatic grid pipeline — forward output and both closed-form
+    # gradients.  1.0 floors: the ring either reproduces the grid path
+    # bit-for-bit or its slot sequencing is wrong; there is no noise
+    # band.
+    "p2m_conv_pipelined_smoke":
+        [(None, "fwd_parity", 1.0),
+         (None, "dimg_parity", 1.0),
+         (None, "dw_parity", 1.0)],
+    # Fused delta-gated stem (DESIGN.md §3.6): the in-kernel
+    # mask-and-copy path against the compute-all where-select reference
+    # on the hold=2 smoke stream.  Parity is exact bit-identity of every
+    # frame's boxes and scores (1.0 floor).  skip_vs_hold is the
+    # stem-FLOPs-skipped ratio divided by the stream's hold fraction —
+    # both frame counts, machine-independent; ≥ 1.0 means the kernel
+    # skipped at least every frame the gate held (the ISSUE acceptance
+    # bound).
+    "p2m_gated_stem_smoke":
+        [(None, "gated_stem_parity", 1.0),
+         (None, "skip_vs_hold", 1.0)],
 }
 
 # Metrics that compare a sharded path against single-device: meaningless
@@ -129,9 +159,16 @@ GATES: dict[str, list[tuple[str | None, str, float]]] = {
 RATIO_METRICS_NEED_DEVICES = {"speedup_vs_single"}
 
 
-def _rows(path: Path) -> dict[str, dict]:
+def _load(path: Path) -> tuple[dict, dict[str, dict]]:
     payload = json.loads(path.read_text())
-    return {r["name"]: r for r in payload["rows"]}
+    return payload.get("meta", {}), {r["name"]: r for r in payload["rows"]}
+
+
+def _provenance(row: dict, meta: dict) -> tuple[str, bool]:
+    """(backend, interpret) for a row; rows predating per-row provenance
+    inherit the file-level meta.backend and are assumed compiled."""
+    return (row.get("backend", meta.get("backend", "unknown")),
+            bool(row.get("interpret", False)))
 
 
 def main() -> int:
@@ -142,8 +179,8 @@ def main() -> int:
         print(f"bench_gate: FAIL — no smoke results at {SMOKE} "
               "(run `python benchmarks/run.py --smoke` first)")
         return 1
-    smoke = _rows(SMOKE)
-    base = _rows(BASELINE)
+    smoke_meta, smoke = _load(SMOKE)
+    base_meta, base = _load(BASELINE)
 
     failures: list[str] = []
     for name, row in smoke.items():
@@ -170,6 +207,19 @@ def main() -> int:
                                 "(regenerate BENCH_p2m_conv.json)")
                 continue
             else:
+                # Baseline-relative comparisons are only meaningful
+                # between same-backend, same-interpret row pairs: refuse
+                # (skip + warn) cross-backend pairs instead of comparing
+                # an interpret-mode CPU number against anything else.
+                s_prov = _provenance(row, smoke_meta)
+                b_prov = _provenance(base[base_name], base_meta)
+                if s_prov != b_prov:
+                    print(f"bench_gate: {smoke_name} {metric} SKIPPED "
+                          f"(cross-backend pair: smoke ran on "
+                          f"{s_prov[0]}/interpret={s_prov[1]}, baseline "
+                          f"{base_name} on {b_prov[0]}/interpret="
+                          f"{b_prov[1]} — not a regression signal)")
+                    continue
                 floor = fraction * base[base_name][metric]
                 source = (f"= {fraction} x baseline "
                           f"{base[base_name][metric]:.2f} from {base_name}")

@@ -10,6 +10,11 @@ from repro.kernels.p2m_conv.conv import (
     p2m_conv_pallas,
     premix_weights,
 )
+from repro.kernels.p2m_conv.gated import (
+    aligned_block_h,
+    p2m_conv_gated_jnp,
+    p2m_conv_pallas_gated,
+)
 from repro.kernels.p2m_conv.ops import (
     p2m_conv,
     p2m_conv_jnp,
@@ -19,6 +24,7 @@ from repro.kernels.p2m_conv.ops import (
 from repro.kernels.p2m_conv.ref import p2m_matmul_ref
 
 __all__ = [
+    "aligned_block_h",
     "conv_out_spatial",
     "im2col_matrix",
     "p2m_backward",
@@ -26,8 +32,10 @@ __all__ = [
     "p2m_bwd_dx_pallas",
     "p2m_bwd_dw_pallas",
     "p2m_conv",
+    "p2m_conv_gated_jnp",
     "p2m_conv_jnp",
     "p2m_conv_pallas",
+    "p2m_conv_pallas_gated",
     "p2m_matmul",
     "p2m_matmul_jnp",
     "p2m_matmul_ref",

@@ -180,6 +180,123 @@ def _split_refs(refs):
     return out_ref, raw_ref, acc_ref
 
 
+# ---------------------------------------------------------------------------
+# Pipelined (manual double-buffered DMA) kernel bodies — DESIGN.md §3.5
+# ---------------------------------------------------------------------------
+#
+# The grid-path kernels above lean on Pallas's automatic pipeline, which
+# double-buffers every operand uniformly.  The pipelined variants below
+# take the activation/weight arrays as HBM-resident (`memory_space=ANY`)
+# refs and stream the per-kernel-row tiles into an explicit `depth`-slot
+# VMEM ring with `pltpu.make_async_copy`: while kernel row ``ki`` is on
+# the MXU, rows ``ki+1 … ki+depth-1`` are already in flight HBM→VMEM —
+# the Helium-guide prefetch discipline, with depth as a tunable knob
+# (autotuner axis, `tune.py`).  The k-loop is unrolled in Python (k ≤ 7
+# in every supported geometry), so slot indices are static and the same
+# body lowers identically under interpret mode.
+#
+# Accumulation order is identical to the grid path (zeros, then one
+# ``[x, x², …] @ W̃[ki]`` add per kernel row, ki ascending), so outputs
+# are bitwise-identical to the non-pipelined kernel — pinned by test and
+# gated at 1.0 in the bench.
+
+
+def _pipelined_body(x_tile_2d, wbuf, shift_ref, out_ref, raw_ref, *, k: int,
+                    depth: int, dx: int, mode: str, v_lsb: float,
+                    max_count: int, x_dma, w_dma):
+    """Shared ring-buffer driver: ``x_tile_2d(slot) -> (rows, kC)`` view of
+    the x ring slot; ``x_dma/w_dma(slot, ki)`` build the async copies."""
+    nbuf = min(depth, k)
+    for ki in range(nbuf):  # warm-up: fill the ring
+        x_dma(ki, ki).start()
+        w_dma(ki, ki).start()
+    acc = None
+    for ki in range(k):
+        slot = ki % nbuf
+        x_dma(slot, ki).wait()
+        w_dma(slot, ki).wait()
+        xcat = _power_concat(x_tile_2d(slot).astype(jnp.float32), dx)
+        term = jax.lax.dot_general(
+            xcat,
+            wbuf[slot].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        # Same fp-add order as the grid path's (init-zeros, then +=).
+        acc = term if ki == 0 else acc + term
+        nxt = ki + nbuf
+        if nxt < k:  # refill the slot we just drained
+            x_dma(slot, nxt).start()
+            w_dma(slot, nxt).start()
+    shift = shift_ref[...].astype(jnp.float32)  # (1, bn), broadcasts
+    out = _epilogue_values(acc, shift, mode=mode, v_lsb=v_lsb,
+                           max_count=max_count)
+    out_ref[...] = out.reshape(out_ref.shape).astype(out_ref.dtype)
+    if raw_ref is not None:
+        raw_ref[...] = acc.reshape(raw_ref.shape)
+
+
+def _conv_kernel_fast_pipelined(a_hbm, wmix_hbm, shift_ref, *refs, k: int,
+                                depth: int, bh: int, bn: int, wo: int,
+                                kc: int, dx: int, mode: str, v_lsb: float,
+                                max_count: int):
+    """stride == kernel, manual pipeline: a_hbm is the whole (mh, k, Wo,
+    kC) image view in HBM; tile (mi, ki) streams into the x ring."""
+    out_ref, raw_ref = (refs[0], refs[1]) if len(refs) == 6 else (refs[0], None)
+    xbuf, wbuf, xsem, wsem = refs[-4:]
+    mi, ni = pl.program_id(0), pl.program_id(1)
+
+    def x_dma(slot, ki):
+        return pltpu.make_async_copy(
+            a_hbm.at[pl.ds(mi * bh, bh), ki], xbuf.at[slot], xsem.at[slot])
+
+    def w_dma(slot, ki):
+        return pltpu.make_async_copy(
+            wmix_hbm.at[ki, :, pl.ds(ni * bn, bn)], wbuf.at[slot],
+            wsem.at[slot])
+
+    _pipelined_body(lambda slot: xbuf[slot].reshape(bh * wo, kc), wbuf,
+                    shift_ref, out_ref, raw_ref, k=k, depth=depth, dx=dx,
+                    mode=mode, v_lsb=v_lsb, max_count=max_count,
+                    x_dma=x_dma, w_dma=w_dma)
+
+
+def _conv_kernel_general_pipelined(rows_hbm, wmix_hbm, shift_ref, *refs,
+                                   k: int, stride: int, depth: int, bh: int,
+                                   bn: int, wo: int, dx: int, mode: str,
+                                   v_lsb: float, max_count: int):
+    """General stride, manual pipeline: rows_hbm is the (k, mh, Wband, C)
+    kernel-row band stack in HBM; band (ki, mi) streams into the x ring
+    and the k sliding windows are sliced out of the VMEM-resident slot."""
+    out_ref, raw_ref = (refs[0], refs[1]) if len(refs) == 6 else (refs[0], None)
+    xbuf, wbuf, xsem, wsem = refs[-4:]
+    mi, ni = pl.program_id(0), pl.program_id(1)
+    c = rows_hbm.shape[-1]
+
+    def x_dma(slot, ki):
+        return pltpu.make_async_copy(
+            rows_hbm.at[ki, pl.ds(mi * bh, bh)], xbuf.at[slot],
+            xsem.at[slot])
+
+    def w_dma(slot, ki):
+        return pltpu.make_async_copy(
+            wmix_hbm.at[ki, :, pl.ds(ni * bn, bn)], wbuf.at[slot],
+            wsem.at[slot])
+
+    def x_tile_2d(slot):
+        band = xbuf[slot]  # (bh, Wband, C), resident
+        parts = []
+        for dw in range(k):
+            win = band[:, dw : dw + wo * stride, :]
+            parts.append(win.reshape(bh, wo, stride, c)[:, :, 0, :])
+        x = jnp.stack(parts, axis=2)  # (bh, Wo, k, C)
+        return x.reshape(bh * wo, k * c)
+
+    _pipelined_body(x_tile_2d, wbuf, shift_ref, out_ref, raw_ref, k=k,
+                    depth=depth, dx=dx, mode=mode, v_lsb=v_lsb,
+                    max_count=max_count, x_dma=x_dma, w_dma=w_dma)
+
+
 
 
 
@@ -196,7 +313,7 @@ def default_conv_blocks(b: int, ho: int, wo: int, n: int,
     jax.jit,
     static_argnames=("kernel", "stride", "coeffs", "mode", "v_lsb",
                      "max_count", "block_h", "block_n", "want_raw",
-                     "interpret"),
+                     "interpret", "pipeline_depth"),
 )
 def p2m_conv_pallas(
     images,
@@ -213,6 +330,7 @@ def p2m_conv_pallas(
     block_n: int | None = None,
     want_raw: bool = False,
     interpret: bool = False,
+    pipeline_depth: int = 0,
 ):
     """Fused P²M conv: NHWC images in, (B, Ho, Wo, N) activations out.
 
@@ -223,11 +341,21 @@ def p2m_conv_pallas(
     ``want_raw=True`` additionally returns the pre-epilogue accumulation
     (the training residual for the backward mask — see `backward.py`).
 
+    ``pipeline_depth``: 0 uses the grid-path kernels (Pallas's automatic
+    pipeline); ≥ 2 switches to the manual double-buffered kernels, which
+    stream the next ``depth-1`` input/weight kernel-row tiles HBM→VMEM
+    while the current tile is on the MXU (DESIGN.md §3.5) — an autotuner
+    axis (`tune.py`).  Outputs are bitwise-identical either way.
+
     VMEM per step (fp32 words): x-tile ``bh·Wo·dx·kC`` (power concat) +
     W̃-tile ``dx·kC·bn`` + acc/out ``2·bh·Wo·bn``.  At the paper geometry
     (Wo=112, kC=75, dx=3, bh=8, bn=128) that is ≈ 1.3 MB — double-buffered
-    comfortably inside the ~16 MB v5e VMEM (DESIGN.md §3.3).
+    comfortably inside the ~16 MB v5e VMEM (DESIGN.md §3.3; the manual
+    path charges ``depth ×`` the streamed tiles explicitly).
     """
+    if pipeline_depth == 1 or pipeline_depth < 0:
+        raise ValueError("pipeline_depth must be 0 (grid path) or >= 2 "
+                         f"(double-buffered ring), got {pipeline_depth}")
     b, h, w_dim, c = images.shape
     k, s = kernel, stride
     ho = conv_out_spatial(h, k, s)
@@ -257,24 +385,23 @@ def p2m_conv_pallas(
     sp = jnp.pad(jnp.asarray(shift, jnp.float32), (0, n_pad - n)).reshape(
         1, n_pad)
 
-    grid = (mh_pad // bh, n_pad // bn, k)
-    out_shapes = [jax.ShapeDtypeStruct((mh_pad, wo, n_pad), jnp.float32)]
-    out_specs = [pl.BlockSpec((bh, wo, bn), lambda mi, ni, ki: (mi, 0, ni))]
-    if want_raw:
-        out_shapes.append(jax.ShapeDtypeStruct((mh_pad, wo, n_pad),
-                                               jnp.float32))
-        out_specs.append(
-            pl.BlockSpec((bh, wo, bn), lambda mi, ni, ki: (mi, 0, ni)))
-
     common = dict(mode=mode, v_lsb=v_lsb, max_count=max_count)
+    pipelined = pipeline_depth >= 2
     if s == k:
         # Zero-copy implicit im2col: crop the valid region and view it as
         # (B·Ho, k, Wo, k·C); the grid's k-dimension walks kernel rows.
         a = images[:, : ho * k, : wo * k, :].reshape(mh, k, wo, kc)
-        a = jnp.pad(a, ((0, mh_pad - mh), (0, 0), (0, 0), (0, 0)))
-        kernel_fn = functools.partial(_conv_kernel_fast, k=k, dx=dx, **common)
-        x_spec = pl.BlockSpec((bh, 1, wo, kc), lambda mi, ni, ki: (mi, ki, 0, 0))
-        x_arr = a
+        x_arr = jnp.pad(a, ((0, mh_pad - mh), (0, 0), (0, 0), (0, 0)))
+        if pipelined:
+            kernel_fn = functools.partial(
+                _conv_kernel_fast_pipelined, k=k, depth=pipeline_depth,
+                bh=bh, bn=bn, wo=wo, kc=kc, dx=dx, **common)
+            x_tile_shape = (bh, wo, kc)
+        else:
+            kernel_fn = functools.partial(_conv_kernel_fast, k=k, dx=dx,
+                                          **common)
+            x_spec = pl.BlockSpec((bh, 1, wo, kc),
+                                  lambda mi, ni, ki: (mi, ki, 0, 0))
     else:
         # Kernel-row band stack: (k, B·Ho, Wpad, C) — ≤ k/s × the input.
         rows = jnp.stack(
@@ -283,27 +410,72 @@ def p2m_conv_pallas(
             axis=0,
         ).reshape(k, mh, w_dim, c)
         w_band = wo * s + k  # every dw window slice stays in-bounds
-        rows = jnp.pad(rows, ((0, 0), (0, mh_pad - mh),
-                              (0, w_band - w_dim), (0, 0)))
-        kernel_fn = functools.partial(_conv_kernel_general, k=k, stride=s,
-                                      wo=wo, dx=dx, **common)
-        x_spec = pl.BlockSpec((1, bh, w_band, c),
-                              lambda mi, ni, ki: (ki, mi, 0, 0))
-        x_arr = rows
+        x_arr = jnp.pad(rows, ((0, 0), (0, mh_pad - mh),
+                               (0, w_band - w_dim), (0, 0)))
+        if pipelined:
+            kernel_fn = functools.partial(
+                _conv_kernel_general_pipelined, k=k, stride=s,
+                depth=pipeline_depth, bh=bh, bn=bn, wo=wo, dx=dx, **common)
+            x_tile_shape = (bh, w_band, c)
+        else:
+            kernel_fn = functools.partial(_conv_kernel_general, k=k,
+                                          stride=s, wo=wo, dx=dx, **common)
+            x_spec = pl.BlockSpec((1, bh, w_band, c),
+                                  lambda mi, ni, ki: (ki, mi, 0, 0))
 
-    outs = pl.pallas_call(
-        kernel_fn,
-        grid=grid,
-        in_specs=[
-            x_spec,
-            pl.BlockSpec((1, dx * kc, bn), lambda mi, ni, ki: (ki, 0, ni)),
-            pl.BlockSpec((1, bn), lambda mi, ni, ki: (0, ni)),
-        ],
-        out_specs=out_specs,
-        out_shape=out_shapes,
-        scratch_shapes=[pltpu.VMEM((bh * wo, bn), jnp.float32)],
-        interpret=interpret,
-    )(x_arr, wmix, sp)
+    if pipelined:
+        # 2-D grid: the kernel-row loop (and its HBM→VMEM streaming) lives
+        # inside the kernel as an explicit depth-slot ring (DESIGN.md §3.5).
+        nbuf = min(pipeline_depth, k)
+        grid = (mh_pad // bh, n_pad // bn)
+        out_shapes = [jax.ShapeDtypeStruct((mh_pad, wo, n_pad), jnp.float32)]
+        out_specs = [pl.BlockSpec((bh, wo, bn), lambda mi, ni: (mi, 0, ni))]
+        if want_raw:
+            out_shapes.append(jax.ShapeDtypeStruct((mh_pad, wo, n_pad),
+                                                   jnp.float32))
+            out_specs.append(
+                pl.BlockSpec((bh, wo, bn), lambda mi, ni: (mi, 0, ni)))
+        outs = pl.pallas_call(
+            kernel_fn,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((1, bn), lambda mi, ni: (0, ni)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shapes,
+            scratch_shapes=[
+                pltpu.VMEM((nbuf,) + x_tile_shape, jnp.float32),
+                pltpu.VMEM((nbuf, dx * kc, bn), jnp.float32),
+                pltpu.SemaphoreType.DMA((nbuf,)),
+                pltpu.SemaphoreType.DMA((nbuf,)),
+            ],
+            interpret=interpret,
+        )(x_arr, wmix, sp)
+    else:
+        grid = (mh_pad // bh, n_pad // bn, k)
+        out_shapes = [jax.ShapeDtypeStruct((mh_pad, wo, n_pad), jnp.float32)]
+        out_specs = [pl.BlockSpec((bh, wo, bn),
+                                  lambda mi, ni, ki: (mi, 0, ni))]
+        if want_raw:
+            out_shapes.append(jax.ShapeDtypeStruct((mh_pad, wo, n_pad),
+                                                   jnp.float32))
+            out_specs.append(
+                pl.BlockSpec((bh, wo, bn), lambda mi, ni, ki: (mi, 0, ni)))
+        outs = pl.pallas_call(
+            kernel_fn,
+            grid=grid,
+            in_specs=[
+                x_spec,
+                pl.BlockSpec((1, dx * kc, bn), lambda mi, ni, ki: (ki, 0, ni)),
+                pl.BlockSpec((1, bn), lambda mi, ni, ki: (0, ni)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shapes,
+            scratch_shapes=[pltpu.VMEM((bh * wo, bn), jnp.float32)],
+            interpret=interpret,
+        )(x_arr, wmix, sp)
 
     def _unpad(o):
         return o[:mh, :, :n].reshape(b, ho, wo, n)

@@ -180,11 +180,12 @@ p2m_matmul.defvjp(_p2m_fwd, _p2m_bwd)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
 def p2m_conv(images, w, shift, model: PixelModel,
              adc: ADCConfig | None = None, mode: str = "relu",
              kernel: int = 5, stride: int = 5,
-             interpret: bool | None = None, bwd_impl: str | None = None):
+             interpret: bool | None = None, bwd_impl: str | None = None,
+             pipeline_depth: int | None = None):
     """Fused P²M convolution: (B, H, W, C) images → (B, Ho, Wo, N).
 
     Forward is the implicit-im2col Pallas kernel (`conv.py`) — no HBM
@@ -194,19 +195,28 @@ def p2m_conv(images, w, shift, model: PixelModel,
     Backward runs the premixed closed-form kernels (`backward.py`); the
     col2im scatter back to image space is a pure reshape at
     ``stride == kernel`` and an XLA scatter-add otherwise.
+
+    ``pipeline_depth`` overrides the autotuner's depth axis (DESIGN.md
+    §3.5): ``None`` defers to the tuned winner, 0 forces the automatic
+    grid pipeline, ≥2 forces the explicit double-buffered DMA ring —
+    tests and benches pin both to prove parity.
     """
     return _conv_fwd_only(images, w, shift, model, adc, mode, kernel,
-                          stride, interpret)
+                          stride, interpret, pipeline_depth=pipeline_depth)
 
 
 def _conv_fwd_only(images, w, shift, model, adc, mode, kernel, stride,
-                   interpret, want_raw: bool = False):
+                   interpret, want_raw: bool = False,
+                   pipeline_depth: int | None = None):
     adc = adc or _DEFAULT_ADC
     interpret = _resolve_interpret(interpret)
     coeffs = _coeff_tuple(model)
     b, h, w_dim, c = images.shape
-    bh, bn = tune.get_conv_blocks(b, h, w_dim, c, w.shape[1], kernel, stride,
-                                  coeffs, mode, interpret=interpret)
+    bh, bn, depth = tune.get_conv_blocks(b, h, w_dim, c, w.shape[1], kernel,
+                                         stride, coeffs, mode,
+                                         interpret=interpret)
+    if pipeline_depth is not None:
+        depth = pipeline_depth
     return p2m_conv_pallas(
         images,
         w,
@@ -219,6 +229,7 @@ def _conv_fwd_only(images, w, shift, model, adc, mode, kernel, stride,
         max_count=adc.max_count,
         block_h=bh,
         block_n=bn,
+        pipeline_depth=depth,
         want_raw=want_raw,
         interpret=interpret,
     )
@@ -236,13 +247,15 @@ def p2m_conv_jnp(images, w, shift, model: PixelModel,
 
 
 def _conv_fwd(images, w, shift, model, adc, mode, kernel, stride, interpret,
-              bwd_impl):
+              bwd_impl, pipeline_depth):
     out, raw = _conv_fwd_only(images, w, shift, model, adc, mode, kernel,
-                              stride, interpret, want_raw=True)
+                              stride, interpret, want_raw=True,
+                              pipeline_depth=pipeline_depth)
     return out, (images, w, shift, raw)
 
 
-def _conv_bwd(model, adc, mode, kernel, stride, interpret, bwd_impl, res, g):
+def _conv_bwd(model, adc, mode, kernel, stride, interpret, bwd_impl,
+              pipeline_depth, res, g):
     images, w, shift, raw = res
     adc = adc or _DEFAULT_ADC
     interpret = _resolve_interpret(interpret)

@@ -1,27 +1,33 @@
 """Block-size autotuner for the P²M kernels (DESIGN.md §5).
 
 Picks ``(block_m, block_n, block_k)`` for `p2m_matmul_pallas` and
-``(block_h, block_n)`` for `p2m_conv_pallas` by enumerating the legal
-candidates under the VMEM budget (tile working set × 2 for the pipeline's
-double buffering must fit in half of the ~16 MB core VMEM) and timing
-each once on synthetic data.
+``(block_h, block_n, pipeline_depth)`` for `p2m_conv_pallas` by
+enumerating the legal candidates under the VMEM budget and timing each
+once on synthetic data.  ``pipeline_depth`` is the manual double-buffer
+ring of DESIGN.md §3.5: depth 0 lets the automatic grid pipeline stream
+(budget charges the implicit ×2 against half VMEM), depth ≥ 2 allocates
+``depth ×`` explicit input+weight slot buffers, so the budget charges
+those buffers directly (DESIGN.md §3.3).
 
 Cache semantics: winners are memoized **per signature** — the problem
 shape, the coefficient table (its nonzero pattern changes the kernel's
-instruction mix), and the epilogue mode.  A signature is timed at most
+instruction mix), the epilogue mode, the **backend** the timing ran on,
+and (for conv) the depth axis swept.  A signature is timed at most
 once per process; every later call is a dict lookup, so the tuner adds
 one-off JIT-warmup-style latency, never steady-state cost.  The cache can
 be exported as JSON (`cache_dump`) so benchmark runs can record winners.
 
 Autotuning is **off by default off-TPU** (timing interpret-mode kernels
 would measure the Python interpreter): `get_*_blocks` then returns the
-static heuristic defaults instantly.  Set ``REPRO_P2M_AUTOTUNE=1`` (or
-pass ``enable=True``) to force it — tests do, with toy shapes, to
-exercise the machinery.
+static heuristic defaults instantly, and emits a one-time structured log
+per (kind, backend) naming the backend and the defaults served.  Set
+``REPRO_P2M_AUTOTUNE=1`` (or pass ``enable=True``) to force tuning —
+tests do, with toy shapes, to exercise the machinery.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import time
 from typing import Callable, Iterable
@@ -29,11 +35,38 @@ from typing import Callable, Iterable
 import jax
 import numpy as np
 
+logger = logging.getLogger(__name__)
+
 # Half of a v5e core's ~16 MB VMEM, leaving the other half for the
 # pipeline's double buffering (DESIGN.md §3.3).
 VMEM_BUDGET_BYTES = 8 * 2**20
 
+# Pipeline depths swept for the conv kernel: 0 = automatic grid pipeline,
+# ≥2 = explicit DMA ring with that many slot buffers (depth 1 would stall
+# every step and is rejected by the kernel).
+CONV_PIPELINE_DEPTHS: tuple[int, ...] = (0, 2, 3)
+
 _CACHE: dict[tuple, dict] = {}
+
+# One-time "autotune disabled, serving defaults" notices, per (kind, backend).
+_DISABLED_LOGGED: set[tuple[str, str]] = set()
+
+
+def _log_disabled_defaults(kind: str, backend: str, default) -> None:
+    """Structured one-shot notice that the static defaults are being served
+    because autotuning is disabled on this backend (satellite: no more
+    silent fallbacks — the log names the backend and exactly what it got)."""
+    token = (kind, backend)
+    if token in _DISABLED_LOGGED:
+        return
+    _DISABLED_LOGGED.add(token)
+    logger.info(json.dumps({
+        "event": "p2m_autotune_disabled_defaults",
+        "kind": kind,
+        "backend": backend,
+        "default": list(default),
+        "hint": "set REPRO_P2M_AUTOTUNE=1 or pass enable=True to tune",
+    }, sort_keys=True))
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -61,10 +94,22 @@ def matmul_vmem_bytes(bm: int, bn: int, bk: int, dx: int = 3) -> int:
     return 4 * words
 
 
-def conv_vmem_bytes(bh: int, wo: int, kc: int, bn: int, dx: int = 3) -> int:
+def conv_vmem_bytes(bh: int, wo: int, kc: int, bn: int, dx: int = 3,
+                    depth: int = 0) -> int:
     """fp32 working set of one `p2m_conv_pallas` grid step (power concat
-    dominates the activation side)."""
-    words = bh * wo * kc * dx + dx * kc * bn + 2 * bh * wo * bn
+    dominates the activation side).
+
+    ``depth == 0``: the automatic grid pipeline — one streamed x tile and
+    one streamed wmix tile (the implicit ×2 double buffer is what the
+    half-VMEM budget leaves room for, DESIGN.md §3.3).  ``depth >= 2``:
+    the explicit DMA ring holds ``depth`` raw input-tile slots plus
+    ``depth`` premixed-weight slots in VMEM scratch, and those are charged
+    directly; the power-concat temp and acc/out tiles ride on top."""
+    if depth >= 2:
+        streamed = depth * (bh * wo * kc + dx * kc * bn)
+    else:
+        streamed = bh * wo * kc + dx * kc * bn
+    words = streamed + bh * wo * kc * dx + 2 * bh * wo * bn
     return 4 * words
 
 
@@ -89,18 +134,24 @@ def matmul_candidates(m: int, k: int, n: int, *, dx: int = 3,
 
 
 def conv_candidates(b: int, ho: int, wo: int, n: int, kc: int, *, dx: int = 3,
-                    budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int]]:
-    """Legal (block_h, block_n) for the fused conv kernel."""
+                    depths: tuple[int, ...] = CONV_PIPELINE_DEPTHS,
+                    budget: int = VMEM_BUDGET_BYTES
+                    ) -> list[tuple[int, int, int]]:
+    """Legal (block_h, block_n, pipeline_depth) for the fused conv kernel.
+    Depth ≥ 2 candidates charge ``depth ×`` explicit slot buffers against
+    the budget, so deep rings are only offered where they fit."""
     out = []
     seen = set()
     for bh in (1, 2, 4, 8, 16, 32, 64):
         for bn in (128, 256):
-            cand = (min(bh, b * ho), min(bn, _ceil_to(n, 128)))
-            if cand in seen:
-                continue
-            seen.add(cand)
-            if conv_vmem_bytes(cand[0], wo, kc, cand[1], dx=dx) <= budget:
-                out.append(cand)
+            for depth in depths:
+                cand = (min(bh, b * ho), min(bn, _ceil_to(n, 128)), depth)
+                if cand in seen:
+                    continue
+                seen.add(cand)
+                if conv_vmem_bytes(cand[0], wo, kc, cand[1], dx=dx,
+                                   depth=depth) <= budget:
+                    out.append(cand)
     return out
 
 
@@ -156,12 +207,16 @@ def get_matmul_blocks(m: int, k: int, n: int, coeffs, mode: str,
     """(block_m, block_n, block_k) for `p2m_matmul_pallas` — tuned when
     enabled, heuristic defaults otherwise."""
     default = (256, 128, 128)
-    # `interpret` is part of the key: winners timed in interpret mode must
-    # never be served to compiled calls with the same shape signature.
-    key = ("matmul", m, k, n, _coeff_sig(coeffs), mode, bool(interpret))
+    backend = jax.default_backend()
+    # `interpret` and `backend` are part of the key: winners timed in
+    # interpret mode (or on another backend) must never be served to
+    # compiled calls with the same shape signature.
+    key = ("matmul", m, k, n, _coeff_sig(coeffs), mode, bool(interpret),
+           backend)
     if key in _CACHE:
         return _CACHE[key]["best"]
     if not enabled(enable):
+        _log_disabled_defaults("matmul", backend, default)
         return default
     from repro.kernels.p2m_conv.kernel import p2m_matmul_pallas
 
@@ -184,15 +239,23 @@ def get_matmul_blocks(m: int, k: int, n: int, coeffs, mode: str,
 def get_conv_blocks(b: int, h: int, w: int, c: int, n: int, kernel: int,
                     stride: int, coeffs, mode: str, *,
                     enable: bool | None = None, interpret: bool = False,
-                    iters: int = 3) -> tuple[int | None, int | None]:
-    """(block_h, block_n) for `p2m_conv_pallas` — tuned when enabled,
-    (None, None) otherwise (the kernel's own heuristic)."""
+                    depths: tuple[int, ...] = CONV_PIPELINE_DEPTHS,
+                    iters: int = 3
+                    ) -> tuple[int | None, int | None, int]:
+    """(block_h, block_n, pipeline_depth) for `p2m_conv_pallas` — tuned
+    when enabled, ``(None, None, 0)`` otherwise (the kernel's own
+    heuristic blocks, automatic grid pipeline)."""
+    default = (None, None, 0)
+    backend = jax.default_backend()
+    # Backend and the swept depth axis are in the key so a winner tuned on
+    # one backend (or over a different depth menu) can't leak to another.
     key = ("conv", b, h, w, c, n, kernel, stride, _coeff_sig(coeffs), mode,
-           bool(interpret))
+           bool(interpret), backend, tuple(depths))
     if key in _CACHE:
         return _CACHE[key]["best"]
     if not enabled(enable):
-        return (None, None)
+        _log_disabled_defaults("conv", backend, default)
+        return default
     from repro.kernels.p2m_conv.conv import conv_out_spatial, p2m_conv_pallas
 
     ho = conv_out_spatial(h, kernel, stride)
@@ -204,13 +267,15 @@ def get_conv_blocks(b: int, h: int, w: int, c: int, n: int, kernel: int,
     s = jax.numpy.zeros((n,), jax.numpy.float32)
 
     def run(cand):
-        bh, bn = cand
+        bh, bn, depth = cand
         return p2m_conv_pallas(imgs, wts, s, kernel=kernel, stride=stride,
                                coeffs=_coeff_sig(coeffs), mode=mode,
-                               block_h=bh, block_n=bn, interpret=interpret)
+                               block_h=bh, block_n=bn,
+                               pipeline_depth=depth, interpret=interpret)
 
     dx = len(coeffs[0])
-    cands = conv_candidates(b, ho, wo, n, kernel * c, dx=dx) or [(8, 128)]
+    cands = conv_candidates(b, ho, wo, n, kernel * c, dx=dx,
+                            depths=tuple(depths)) or [(8, 128, 0)]
     return autotune(key, cands, run, iters=iters)["best"]
 
 

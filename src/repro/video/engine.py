@@ -18,13 +18,27 @@ Per-slot state the core's admit/recycle contract manages via
 Every tick is ONE compiled, shape-stable launch over the whole slot
 table: the deploy-folded P²M stem runs on the padded image batch, a
 per-slot ``rerun`` mask selects fresh stem activations or the cached
-ones (`jnp.where`), and the backbone + CenterNet-lite heads + top-k
-decode ride the same launch.  Skipped slots still *compute* the stem on
-the padded batch — shape stability demands it — but the thing the gate
-models is the **sensor readout**: a skipped tick transmits no activation
-map, and the bits ledger measures exactly that.  With ``threshold=0``
-the gate only skips bit-identical frames, so gated detections equal the
-dense engine's exactly (pinned by test).
+ones, and the backbone + CenterNet-lite heads + top-k decode ride the
+same launch.  The stem select has two paths (``stem_path``):
+
+* ``"where"`` — the reference: compute the stem for every slot, then a
+  host-visible `jnp.where` discards skipped results.  Shape-stable, but
+  every masked-off slot still pays the full stem FLOPs.
+* ``"gated"`` — the fused kernel (`kernels/p2m_conv/gated.py`,
+  DESIGN.md §3.6): the rerun mask and the cached stem ride INTO the
+  Pallas kernel as operands and masked-off tiles short-circuit to a
+  cache copy — one launch, no wasted stem FLOPs, no host round-trip.
+  Bitwise-identical to the where-select by construction (bench-gated at
+  1.0).  ``"auto"`` picks it on a TPU single-device engine and falls
+  back to ``"where"`` elsewhere (interpret-mode gating would *measure*
+  the Python interpreter; a mesh needs the where path's sharded XLA
+  select).
+
+Either way the thing the delta gate models is the **sensor readout**: a
+skipped tick transmits no activation map, and the bits ledger measures
+exactly that.  With ``threshold=0`` the gate only skips bit-identical
+frames, so gated detections equal the dense engine's exactly (pinned by
+test).
 
 Scale-out mirrors `VisionEngine`: pass ``mesh=`` and the image batch,
 cached-stem batch, and rerun mask shard over the data axes of the §7.1
@@ -129,15 +143,20 @@ class StreamRequest(ScheduledRequest):
 @functools.lru_cache(maxsize=None)
 def _stream_forward_for(cfg: MNV2Config, dcfg: DetectConfig,
                         mesh: Mesh | None, batch: int,
-                        impl: str | None = None):
+                        impl: str | None = None,
+                        stem_path: str = "where",
+                        interpret: bool | None = None):
     """One compiled launch: gated stem → backbone → heads → top-k decode.
 
     Params, BN, deploy, and detection-head trees ride as traced
-    arguments so every engine on this (cfg, dcfg, mesh, batch, impl)
-    shares one compilation; under a mesh the batched operands shard over
-    the data axes (§7.1 plan) and everything else replicates.  ``impl``
-    selects the stem conv path — the degradation ladder requests
-    ``"patches"`` after repeated kernel faults (DESIGN.md §10).
+    arguments so every engine on this (cfg, dcfg, mesh, batch, impl,
+    stem_path) shares one compilation; under a mesh the batched operands
+    shard over the data axes (§7.1 plan) and everything else replicates.
+    ``impl`` selects the stem conv path on the ``"where"`` select —
+    the degradation ladder requests ``"patches"`` after repeated kernel
+    faults (DESIGN.md §10); ``stem_path="gated"`` instead runs the
+    fused delta-gated Pallas stem (cache + mask in-kernel, §3.6) and
+    requires ``mesh=None``.
 
     The cached stem is *validated on device*: a slot whose cache holds
     any non-finite value (a corrupted analog activation that slipped
@@ -148,15 +167,40 @@ def _stream_forward_for(cfg: MNV2Config, dcfg: DetectConfig,
     equals the requested one, so the guard is bitwise-free in the
     fault-free path.
     """
+    if stem_path not in ("where", "gated"):
+        raise ValueError(f"unknown stem_path {stem_path!r}")
+    if stem_path == "gated" and mesh is not None:
+        raise ValueError("stem_path='gated' needs mesh=None: the fused "
+                         "kernel takes the whole slot table in one launch; "
+                         "sharded engines keep the where-select")
 
     grid = det_grid(cfg.p2m.out_spatial(cfg.image_size))
+    if stem_path == "gated":
+        from repro.core.pixel_model import default_pixel_model
+        from repro.kernels.p2m_conv.gated import p2m_conv_pallas_gated
+        from repro.kernels.p2m_conv.ops import _coeff_tuple
+
+        gated_coeffs = _coeff_tuple(default_pixel_model())
+        gated_interpret = (jax.default_backend() != "tpu"
+                           if interpret is None else interpret)
 
     def forward(params, bn, dep, det, images, cached, rerun):
         cache_ok = jnp.isfinite(cached).all(axis=(1, 2, 3))
         rerun = rerun | ~cache_ok
-        stem, _ = apply_mnv2_stem(params, bn, images, cfg, None,
-                                  train=False, p2m_deploy=dep, p2m_impl=impl)
-        stem = jnp.where(rerun[:, None, None, None], stem, cached)
+        if stem_path == "gated":
+            # deploy-form stem (conv → quantizing ADC epilogue, matching
+            # apply_p2m_conv_deploy) with the select fused in-kernel
+            stem = p2m_conv_pallas_gated(
+                images, dep["w"], dep["shift"], cached, rerun,
+                kernel=cfg.p2m.kernel, stride=cfg.p2m.stride,
+                coeffs=gated_coeffs, mode="quant",
+                v_lsb=cfg.p2m.adc.v_lsb, max_count=cfg.p2m.adc.max_count,
+                interpret=gated_interpret)
+        else:
+            stem, _ = apply_mnv2_stem(params, bn, images, cfg, None,
+                                      train=False, p2m_deploy=dep,
+                                      p2m_impl=impl)
+            stem = jnp.where(rerun[:, None, None, None], stem, cached)
         feats, _ = apply_mnv2_backbone(params, bn, stem, cfg, train=False)
         boxes, scores = decode_detections(
             apply_detect_head(det, feats, grid), dcfg.max_dets)
@@ -197,13 +241,23 @@ class StreamEngine(SlotEngine):
                  iou_thresh: float = 0.3,
                  mesh: Mesh | None = None,
                  evict: str = "drop-newest",
-                 degrade_after: int = 3, **core):
+                 degrade_after: int = 3,
+                 stem_path: str = "auto",
+                 stem_impl: str | None = None, **core):
         """``evict`` defaults to drop-newest: an admitted stream is a
         promise held for its whole lifetime (unlike single frames, where
         freshness beats fairness and the vision engine drops oldest).
         ``degrade_after``: launch-fault count after which the stem falls
         back to the patches reference conv; ``core`` forwards the
-        scheduler's fault-tolerance knobs (DESIGN.md §10)."""
+        scheduler's fault-tolerance knobs (DESIGN.md §10).
+
+        ``stem_path``: ``"gated"`` fuses the delta-gate select into the
+        stem kernel (one launch, skipped slots pay no stem FLOPs —
+        DESIGN.md §3.6, single-device only); ``"where"`` is the
+        compute-all reference select; ``"auto"`` picks gated on a TPU
+        single-device engine, where otherwise.  ``stem_impl`` forces the
+        where-path conv impl (tests pass ``"pallas"`` so the reference
+        is the same kernel family the gated path fuses)."""
         if cfg.variant != "p2m":
             raise ValueError("StreamEngine requires the p2m variant: stem "
                              "caching and readout accounting are defined by "
@@ -231,6 +285,18 @@ class StreamEngine(SlotEngine):
             out_bits=cfg.p2m.n_bits)
         self._iou_thresh = iou_thresh
 
+        if stem_path == "auto":
+            stem_path = ("gated" if mesh is None
+                         and jax.default_backend() == "tpu" else "where")
+        if stem_path not in ("gated", "where"):
+            raise ValueError(f"unknown stem_path {stem_path!r}")
+        self.stem_path = stem_path
+        self._stem_impl = stem_impl
+        # in-kernel skip accounting over *active* slots (gated path only:
+        # the where path computes every slot regardless)
+        self._stem_total = 0
+        self._stem_skipped = 0
+
         ho = cfg.p2m.out_spatial(cfg.image_size)
         co = cfg.p2m.out_channels
         # device-resident across ticks: _launch feeds the previous tick's
@@ -240,7 +306,8 @@ class StreamEngine(SlotEngine):
                                       jnp.float32)
         self._gates: list[DeltaGate | None] = [None] * self.n_slots
         self._trackers: list[Tracker | None] = [None] * self.n_slots
-        self._fwd = _stream_forward_for(cfg, det_cfg, mesh, self.n_slots)
+        self._fwd = _stream_forward_for(cfg, det_cfg, mesh, self.n_slots,
+                                        stem_impl, stem_path)
 
     # ------------------------------------------------- adapter hooks
 
@@ -268,9 +335,12 @@ class StreamEngine(SlotEngine):
         self._kernel_faults += 1
         if self.degraded is None and self._kernel_faults >= self.degrade_after:
             self.degraded = "patches"
+            # the ladder lands on the compute-all where-select: a faulting
+            # fused/gated kernel is exactly what it must route around
+            self.stem_path = "where"
             self._fwd = _stream_forward_for(self.cfg, self.det_cfg,
                                             self.mesh, self.n_slots,
-                                            "patches")
+                                            "patches", "where")
 
     def _launch(self, active):
         h = w = self.cfg.image_size
@@ -292,6 +362,12 @@ class StreamEngine(SlotEngine):
         jax.block_until_ready((stem, boxes, scores))
         self._cached_stem = stem  # stays on device (sharded under a mesh)
         rerun_eff = np.asarray(rerun_eff)
+        if self.stem_path == "gated":
+            # every active slot whose effective mask is False had its stem
+            # tile short-circuited in-kernel — zero MXU work, by design
+            self._stem_total += len(active)
+            self._stem_skipped += sum(
+                1 for i, _ in active if not rerun_eff[i])
         for i, req in active:  # the per-stream ledger meters the tick
             if rerun_eff[i] and not rerun[i]:
                 # the on-device check caught a corrupted stem cache:
@@ -341,4 +417,11 @@ class StreamEngine(SlotEngine):
             "bits_per_frame": bpf,
             "dense_bits_per_frame": dense,
             "measured_reduction_vs_dense": dense / bpf if bpf else 0.0,
+            "stem_path": self.stem_path,
+            # gated path only: fraction of active-slot stem computations
+            # the fused kernel short-circuited (0.0 on the where path,
+            # which computes every slot)
+            "stem_flops_skipped_ratio": (
+                self._stem_skipped / self._stem_total
+                if self._stem_total else 0.0),
         }

@@ -247,8 +247,10 @@ def test_deploy_impl_equivalence():
 def test_autotune_candidates_respect_vmem_budget():
     for cand in tune.matmul_candidates(4096, 75, 8):
         assert tune.matmul_vmem_bytes(*cand) <= tune.VMEM_BUDGET_BYTES
-    for bh, bn in tune.conv_candidates(8, 112, 112, 8, 15):
-        assert tune.conv_vmem_bytes(bh, 112, 15, bn) <= tune.VMEM_BUDGET_BYTES
+    for bh, bn, depth in tune.conv_candidates(8, 112, 112, 8, 15):
+        assert depth in tune.CONV_PIPELINE_DEPTHS
+        assert tune.conv_vmem_bytes(bh, 112, 15, bn,
+                                    depth=depth) <= tune.VMEM_BUDGET_BYTES
     assert tune.matmul_candidates(4096, 75, 8)  # never empty at paper geom
     assert tune.conv_candidates(8, 112, 112, 8, 15)
 
@@ -282,7 +284,7 @@ def test_autotune_disabled_returns_defaults_instantly():
     assert tune.get_matmul_blocks(10**6, 75, 8, COEFFS, "relu",
                                   enable=False) == (256, 128, 128)
     assert tune.get_conv_blocks(8, 224, 224, 3, 8, 5, 5, COEFFS, "relu",
-                                enable=False) == (None, None)
+                                enable=False) == (None, None, 0)
 
 
 def test_autotuned_conv_blocks_stay_correct():
@@ -290,11 +292,12 @@ def test_autotuned_conv_blocks_stay_correct():
     tune.cache_clear()
     imgs, w, sh = _conv_data(1, 15, 15, 3, 5, seed=9)
     ref = _patch_reference(imgs, w, sh, 5, 5, "relu")
-    bh, bn = tune.get_conv_blocks(1, 15, 15, 3, 8, 5, 5, COEFFS, "relu",
-                                  enable=True, interpret=True, iters=1)
+    bh, bn, depth = tune.get_conv_blocks(1, 15, 15, 3, 8, 5, 5, COEFFS,
+                                         "relu", enable=True, interpret=True,
+                                         iters=1)
     out = p2m_conv_pallas(imgs, w, sh, kernel=5, stride=5, coeffs=COEFFS,
                           mode="relu", block_h=bh, block_n=bn,
-                          interpret=True)
+                          pipeline_depth=depth, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
     tune.cache_clear()
