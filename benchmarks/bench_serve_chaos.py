@@ -22,16 +22,27 @@ pure functions of (seed, tick, uid), the schedule is deterministic, so
 completion / failure / deadline-miss rates replay bit-identically on any
 machine — the floors in `scripts/bench_gate.py` are exact, not
 statistical.
+
+The smoke replay also runs **traced** (DESIGN.md §13): a `Tracer` rides
+the front door, the replay repeats with a second fresh tracer, and the
+two Perfetto exports must be byte-identical (``trace_deterministic``) —
+tick-domain stamps carry no wall-clock, so the trace is as replayable as
+the metrics it witnesses.  The first export lands at
+``benchmarks/results/trace_smoke.json`` where the gate validates its
+span schema.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro.obs import Tracer, validate_trace_events
 from benchmarks.traces import ModalityMix, build_mixed_trace
 from repro.configs import get_smoke_config
 from repro.launch.serve import FrontDoor
@@ -116,7 +127,7 @@ def _traffic(m: _Models, seed: int = 0) -> list:
     return build_mixed_trace(mix, make, seed=seed)
 
 
-def _build_door(m: _Models, plan: FaultPlan | None):
+def _build_door(m: _Models, plan: FaultPlan | None, tracer=None):
     """Fresh engines with the §10 knobs on; per-engine injectors get
     distinct seeds so one modality's chaos never mirrors another's."""
     def injector(k: int):
@@ -136,7 +147,8 @@ def _build_door(m: _Models, plan: FaultPlan | None):
                           max_queue=N_STREAM, evict="deadline",
                           admission="deadline", max_serve_ticks=32,
                           launch_retries=1, degrade_after=6, faults=inj[2])
-    return FrontDoor(lm=lm, vision=vision, stream=stream), inj
+    return FrontDoor(tracer=tracer, lm=lm, vision=vision,
+                     stream=stream), inj
 
 
 def _percentiles(values: list) -> dict:
@@ -148,9 +160,10 @@ def _percentiles(values: list) -> dict:
             "p99": float(np.percentile(arr, 99))}
 
 
-def replay(m: _Models, plan: FaultPlan | None, seed: int = 0) -> dict:
+def replay(m: _Models, plan: FaultPlan | None, seed: int = 0,
+           tracer=None) -> dict:
     """One chaos replay; returns the tick-based metric dict."""
-    door, injectors = _build_door(m, plan)
+    door, injectors = _build_door(m, plan, tracer=tracer)
     reqs = _traffic(m, seed)
     total = len(reqs)
     t0 = time.perf_counter()
@@ -197,10 +210,32 @@ def _emit(name: str, r: dict) -> None:
          **{k: v for k, v in r.items() if k != "health"})
 
 
+#: Where the gated trace artifact lands (scripts/bench_gate.py
+#: validates its span schema; EXPERIMENTS.md records provenance).
+TRACE_PATH = (pathlib.Path(__file__).resolve().parent
+              / "results" / "trace_smoke.json")
+
+
 def run(smoke: bool = False) -> None:
     m = _init_models()
     # Fault layer off (zero-rate plan, injectors attached): everything
     # completes — the gate holds this at 1.0.
     _emit("p2m_serve_chaos_off_smoke", replay(m, FaultPlan()))
-    # The smoke fault plan: containment + degradation under load.
-    _emit("p2m_serve_chaos_smoke", replay(m, SMOKE_PLAN))
+    # The smoke fault plan: containment + degradation under load —
+    # traced twice with fresh tracers.  Tracing is schedule-neutral, so
+    # the gated completion floors read the traced replay unchanged; the
+    # byte-compare of the two exports pins the determinism contract
+    # (DESIGN.md §13.3) on the real serving stack, faults and all.
+    tr1, tr2 = Tracer(), Tracer()
+    r = replay(m, SMOKE_PLAN, tracer=tr1)
+    replay(m, SMOKE_PLAN, tracer=tr2)
+    TRACE_PATH.parent.mkdir(parents=True, exist_ok=True)
+    e1 = tr1.export(TRACE_PATH)
+    e2 = tr2.export()
+    problems = validate_trace_events(json.loads(e1))
+    r["trace_deterministic"] = 1.0 if e1 == e2 else 0.0
+    r["trace_valid"] = 1.0 if not problems else 0.0
+    r["trace_events"] = len(tr1.trace_events())
+    if problems:
+        print(f"bench_serve_chaos: trace schema problems: {problems[:5]}")
+    _emit("p2m_serve_chaos_smoke", r)

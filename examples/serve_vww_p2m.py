@@ -18,12 +18,20 @@ data-parallel *within* a replica, replica-parallel across the pool —
 and --lm-tick-cost C makes the front door event-driven: the LM engine
 fires once per C door ticks while vision fires every tick.
 
+With --trace out.json, a deterministic tick-domain `Tracer` rides the
+door (DESIGN.md §13) and the run exports a Chrome/Perfetto trace —
+open it at ui.perfetto.dev to see every request's queue/serve spans
+against the engine-tick tracks.  The run always ends with a metrics
+registry snapshot: the counters, tick-histograms, and component views
+every layer published during the replay.
+
 Run:  PYTHONPATH=src python examples/serve_vww_p2m.py --requests 24
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_vww_p2m.py --requests 24 \
-          --mesh --replicas 2 --lm-tick-cost 4
+          --mesh --replicas 2 --lm-tick-cost 4 --trace door.json
 """
 import argparse
+import json
 import pathlib
 import sys
 
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.obs import Tracer, default_registry
 from repro.configs.p2m_vww import SERVE_MAX_BATCH, SERVE_MAX_QUEUE
 from repro.data import SyntheticVWW
 from repro.launch.mesh import make_debug_mesh, make_submeshes
@@ -64,6 +73,9 @@ def main():
     ap.add_argument("--lm-tick-cost", type=int, default=1,
                     help="front-door ticks per LM engine tick (>1 makes "
                          "the door event-driven, DESIGN.md §11)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export a Perfetto tick-domain trace of the "
+                         "replay to this path (DESIGN.md §13)")
     args = ap.parse_args()
 
     cfg = MNV2Config(variant="p2m", image_size=args.image_size, width=0.25,
@@ -103,7 +115,8 @@ def main():
         reqs.append(Request(uid=1000 + uid, prompt=prompt, max_new_tokens=8,
                             arrival_tick=2 * uid))
 
-    door = FrontDoor(vision=engine, lm=lm)
+    tracer = Tracer() if args.trace else None
+    door = FrontDoor(tracer=tracer, vision=engine, lm=lm)
     merged = door.run(reqs)
     done = [r for n, r in merged if n == "vision"]
     lm_done = [r for n, r in merged if n == "lm"]
@@ -125,6 +138,14 @@ def main():
           f"mean_queue={s['mean_queue_ticks']:.2f} ticks "
           f"mean_launch={s['mean_launch_us'] / 1e3:.1f} ms "
           f"evictions={s['evictions']}")
+
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"trace: {len(tracer.trace_events())} events -> {args.trace} "
+              "(open at ui.perfetto.dev)")
+    snap = default_registry().snapshot()
+    print("\nmetrics registry snapshot (DESIGN.md §13.2):")
+    print(json.dumps(snap, indent=2, sort_keys=True, default=str))
 
 
 if __name__ == "__main__":

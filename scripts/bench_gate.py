@@ -22,19 +22,35 @@ warning.  Absolute floors (counts and exact ratios) are
 machine-independent and always gate.  Old baseline rows without per-row
 fields inherit the file-level ``meta.backend``.
 
+Trace artifact: the chaos bench also writes the gated Perfetto trace
+``benchmarks/results/trace_smoke.json`` (DESIGN.md §13); this gate
+re-validates its span schema with `repro.obs.validate_trace_events`
+(well-formed spans, no orphaned request tracks, monotone tick stamps)
+and holds the smoke row's ``trace_deterministic`` / ``trace_valid``
+bits at 1.0 — the byte-identity contract either holds or the trace
+subsystem regressed; there is no noise band.
+
 Skip with REPRO_BENCH_GATE=0 (e.g. on a loaded laptop).
 """
 from __future__ import annotations
 
 import json
+import logging
 import math
 import os
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import structured, validate_trace_events  # noqa: E402
+
 BASELINE = ROOT / "BENCH_p2m_conv.json"
 SMOKE = ROOT / "benchmarks" / "results" / "BENCH_p2m_conv.smoke.json"
+TRACE = ROOT / "benchmarks" / "results" / "trace_smoke.json"
+
+log = logging.getLogger("bench_gate")
 
 # smoke row -> list of (baseline row, metric, floor): the smoke metric
 # must reach `floor × baseline[baseline row][metric]` — or, when the
@@ -83,9 +99,17 @@ GATES: dict[str, list[tuple[str | None, str, float]]] = {
     # guard) drops them far below.
     "p2m_serve_chaos_off_smoke":
         [(None, "completion_rate", 0.999)],
+    # trace_deterministic / trace_valid are exact 0-or-1 bits from the
+    # traced double replay (DESIGN.md §13.3): two fresh tracers over the
+    # same seeded chaos must export byte-identical Perfetto JSON, and
+    # the export must pass schema validation.  1.0 floors — the
+    # determinism contract either holds or the trace subsystem
+    # regressed; there is no noise band.
     "p2m_serve_chaos_smoke":
         [(None, "completion_rate", 0.7),
-         (None, "nonfault_completion_rate", 0.95)],
+         (None, "nonfault_completion_rate", 0.95),
+         (None, "trace_deterministic", 1.0),
+         (None, "trace_valid", 1.0)],
     # Replica-pool saturation (benchmarks/bench_serve_saturation.py,
     # DESIGN.md §11): synthetic cost-model engines — every metric counts
     # requests and ticks, never wall-clock, so the floors are exact
@@ -171,7 +195,33 @@ def _provenance(row: dict, meta: dict) -> tuple[str, bool]:
             bool(row.get("interpret", False)))
 
 
+def _check_trace(failures: list[str]) -> None:
+    """Re-validate the committed chaos-trace artifact's span schema
+    (DESIGN.md §13.1): well-formed events, no orphaned request tracks,
+    monotone tick stamps.  The bench already validated its in-memory
+    export; this guards the *artifact* — a truncated or hand-edited
+    file fails here even when the smoke row's bits read 1.0."""
+    if not TRACE.exists():
+        failures.append(f"missing trace artifact {TRACE} "
+                        "(run `python benchmarks/run.py --smoke` first)")
+        return
+    try:
+        payload = json.loads(TRACE.read_text())
+    except json.JSONDecodeError as exc:
+        failures.append(f"trace artifact {TRACE.name}: invalid JSON ({exc})")
+        return
+    problems = validate_trace_events(payload)
+    for p in problems[:10]:
+        failures.append(f"trace artifact {TRACE.name}: {p}")
+    if not problems:
+        n = len(payload.get("traceEvents", []))
+        print(f"bench_gate: trace artifact {TRACE.name} schema OK "
+              f"({n} events)")
+
+
 def main() -> int:
+    logging.basicConfig(level=logging.INFO,
+                        format="%(name)s: %(message)s")
     if os.environ.get("REPRO_BENCH_GATE", "1") == "0":
         print("bench_gate: skipped (REPRO_BENCH_GATE=0)")
         return 0
@@ -183,6 +233,7 @@ def main() -> int:
     base_meta, base = _load(BASELINE)
 
     failures: list[str] = []
+    _check_trace(failures)
     for name, row in smoke.items():
         t = row["us_per_call"]
         if not (math.isfinite(t) and t > 0):
@@ -196,9 +247,11 @@ def main() -> int:
         for base_name, metric, fraction in specs:
             if (metric in RATIO_METRICS_NEED_DEVICES
                     and row.get("devices") == 1):
-                print(f"bench_gate: {smoke_name} {metric} SKIPPED "
-                      "(smoke row ran on a 1-device mesh; the ratio is "
-                      "timing noise, not a sharding signal)")
+                structured(log, "bench_gate_skip", level=logging.WARNING,
+                           row=smoke_name, metric=metric,
+                           reason="1-device mesh: the sharded-vs-single "
+                                  "ratio is timing noise, not a sharding "
+                                  "signal")
                 continue
             if base_name is None:
                 floor, source = fraction, "absolute floor"
@@ -214,11 +267,16 @@ def main() -> int:
                 s_prov = _provenance(row, smoke_meta)
                 b_prov = _provenance(base[base_name], base_meta)
                 if s_prov != b_prov:
-                    print(f"bench_gate: {smoke_name} {metric} SKIPPED "
-                          f"(cross-backend pair: smoke ran on "
-                          f"{s_prov[0]}/interpret={s_prov[1]}, baseline "
-                          f"{base_name} on {b_prov[0]}/interpret="
-                          f"{b_prov[1]} — not a regression signal)")
+                    structured(log, "bench_gate_skip",
+                               level=logging.WARNING,
+                               row=smoke_name, metric=metric,
+                               smoke_backend=s_prov[0],
+                               smoke_interpret=s_prov[1],
+                               baseline_row=base_name,
+                               baseline_backend=b_prov[0],
+                               baseline_interpret=b_prov[1],
+                               reason="cross-backend pair is not a "
+                                      "regression signal")
                     continue
                 floor = fraction * base[base_name][metric]
                 source = (f"= {fraction} x baseline "

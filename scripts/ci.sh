@@ -10,8 +10,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 # (includes the video-subsystem tests — test_video_detect_track.py and
-# test_video_stream.py — and the fault-injection / deadline /
-# containment tests in test_faults.py, all in the default lane)
+# test_video_stream.py — the fault-injection / deadline / containment
+# tests in test_faults.py, and the observability tests in test_obs.py —
+# tracer determinism / disabled-tracer freedom / registry-vs-legacy
+# parity / compile-cache counters, DESIGN.md §13 — all in the default
+# lane)
 python -m pytest -x -q
 
 echo "== multi-device lane (8 virtual CPU devices, in-process) =="
@@ -39,10 +42,16 @@ echo "== benchmark smoke (p2m kernels + serving + video + chaos + saturation + w
 # completion-rate floors read (DESIGN.md §10), the
 # p2m_serve_saturation_* rows its pool-scaling and lockstep-equivalence
 # floors read (DESIGN.md §11), and the p2m_rwkv_wkv_* / p2m_lm_session_*
-# rows its WKV-parity and session-determinism floors read (DESIGN.md §12)
+# rows its WKV-parity and session-determinism floors read (DESIGN.md
+# §12).  The chaos bench also writes the gated Perfetto trace artifact
+# benchmarks/results/trace_smoke.json and stamps the smoke row with the
+# trace_deterministic / trace_valid bits the gate holds at 1.0
+# (DESIGN.md §13).
 python benchmarks/run.py --smoke
 
 echo "== bench regression gate (vs BENCH_p2m_conv.json baseline) =="
+# also re-validates the trace artifact's span schema (well-formed
+# events, no orphaned request tracks, monotone tick stamps)
 python scripts/bench_gate.py
 
 echo "== accelerator lane (opt-in: active when jax reports tpu/gpu) =="

@@ -155,3 +155,17 @@ class StreamBandwidthLedger:
         """Measured dense/actual bits ratio (> 1 once any frame skips)."""
         bpf = self.bits_per_frame
         return self.dense_bits_per_frame / bpf if bpf else 0.0
+
+    def summary(self) -> dict:
+        """The ledger as one dict — the view shape the metrics registry
+        snapshots (`StreamEngine` publishes one per live gate,
+        DESIGN.md §13.2)."""
+        return {
+            "frames": self.frames,
+            "rerun_frames": self.rerun_frames,
+            "bits": self.bits,
+            "skip_rate": self.skip_rate,
+            "bits_per_frame": self.bits_per_frame,
+            "dense_bits_per_frame": self.dense_bits_per_frame,
+            "reduction_vs_dense": self.reduction_vs_dense,
+        }

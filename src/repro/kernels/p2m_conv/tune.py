@@ -35,6 +35,9 @@ from typing import Callable, Iterable
 import jax
 import numpy as np
 
+from repro.obs.log import structured
+from repro.obs.metrics import default_registry
+
 logger = logging.getLogger(__name__)
 
 # Half of a v5e core's ~16 MB VMEM, leaving the other half for the
@@ -53,20 +56,24 @@ _DISABLED_LOGGED: set[tuple[str, str]] = set()
 
 
 def _log_disabled_defaults(kind: str, backend: str, default) -> None:
-    """Structured one-shot notice that the static defaults are being served
-    because autotuning is disabled on this backend (satellite: no more
-    silent fallbacks — the log names the backend and exactly what it got)."""
+    """One-shot notice (per kind × backend) that the static defaults are
+    being served because autotuning is disabled on this backend — routed
+    through the stack's structured-logging helper (`obs.log`, DESIGN.md
+    §13.4) so the record shares the one machine-parseable schema.  Every
+    disabled-default *serve* also counts into the metrics registry
+    (``autotune.disabled_default``), one-shot or not."""
+    default_registry().counter("autotune.disabled_default").inc()
     token = (kind, backend)
     if token in _DISABLED_LOGGED:
         return
     _DISABLED_LOGGED.add(token)
-    logger.info(json.dumps({
-        "event": "p2m_autotune_disabled_defaults",
-        "kind": kind,
-        "backend": backend,
-        "default": list(default),
-        "hint": "set REPRO_P2M_AUTOTUNE=1 or pass enable=True to tune",
-    }, sort_keys=True))
+    structured(
+        logger, "p2m_autotune_disabled_defaults",
+        kind=kind,
+        backend=backend,
+        default=list(default),
+        hint="set REPRO_P2M_AUTOTUNE=1 or pass enable=True to tune",
+    )
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -178,15 +185,26 @@ def _coeff_sig(coeffs) -> tuple:
 
 
 def autotune(key: tuple, candidates: Iterable, run: Callable,
-             *, iters: int = 3) -> dict:
+             *, iters: int = 3, vmem: Callable | None = None) -> dict:
     """Generic: time `run(candidate)` for each candidate, cache the winner.
 
-    Returns ``{"best": candidate, "timings": {candidate: seconds}}``.
-    Failures (e.g. a block shape the backend rejects) are recorded as inf
-    and skipped, so one bad candidate never kills a tuning pass.
+    Returns ``{"best": candidate, "timings": {candidate: seconds},
+    "decision": record}``.  Failures (e.g. a block shape the backend
+    rejects) are recorded as inf and skipped, so one bad candidate never
+    kills a tuning pass.
+
+    Observability (DESIGN.md §13.2): every call counts
+    ``autotune.cache_hit`` / ``autotune.cache_miss`` into the metrics
+    registry, and a miss stores a **decision record** — the candidate
+    set with its VMEM charges (``vmem`` maps candidate → bytes), the
+    chosen blocks, and the winning time — retrievable via
+    :func:`decision_records` and logged as one structured
+    ``p2m_autotune_decision`` record.
     """
     if key in _CACHE:
+        default_registry().counter("autotune.cache_hit").inc()
         return _CACHE[key]
+    default_registry().counter("autotune.cache_miss").inc()
     timings: dict = {}
     for cand in candidates:
         try:
@@ -196,9 +214,28 @@ def autotune(key: tuple, candidates: Iterable, run: Callable,
     if not timings or all(np.isinf(list(timings.values()))):
         raise RuntimeError(f"autotune: no viable candidate for {key}")
     best = min(timings, key=timings.get)
-    result = {"best": best, "timings": timings}
+    decision = {
+        "key": repr(key),
+        "kind": key[0] if key and isinstance(key[0], str) else "?",
+        "candidates": [list(c) for c in timings],
+        "vmem_bytes": ([int(vmem(c)) for c in timings]
+                       if vmem is not None else None),
+        "best": list(best),
+        "best_s": timings[best],
+        "n_viable": sum(1 for t in timings.values() if np.isfinite(t)),
+    }
+    result = {"best": best, "timings": timings, "decision": decision}
     _CACHE[key] = result
+    structured(logger, "p2m_autotune_decision",
+               kind=decision["kind"], best=decision["best"],
+               n_candidates=len(timings), n_viable=decision["n_viable"])
     return result
+
+
+def decision_records() -> list[dict]:
+    """Every autotune decision taken this process (cache misses only —
+    a hit serves the recorded decision's winner)."""
+    return [v["decision"] for v in _CACHE.values() if "decision" in v]
 
 
 def get_matmul_blocks(m: int, k: int, n: int, coeffs, mode: str,
@@ -214,6 +251,7 @@ def get_matmul_blocks(m: int, k: int, n: int, coeffs, mode: str,
     key = ("matmul", m, k, n, _coeff_sig(coeffs), mode, bool(interpret),
            backend)
     if key in _CACHE:
+        default_registry().counter("autotune.cache_hit").inc()
         return _CACHE[key]["best"]
     if not enabled(enable):
         _log_disabled_defaults("matmul", backend, default)
@@ -233,7 +271,8 @@ def get_matmul_blocks(m: int, k: int, n: int, coeffs, mode: str,
 
     dx = len(coeffs[0])
     cands = matmul_candidates(m, k, n, dx=dx) or [default]
-    return autotune(key, cands, run, iters=iters)["best"]
+    return autotune(key, cands, run, iters=iters,
+                    vmem=lambda c: matmul_vmem_bytes(*c, dx=dx))["best"]
 
 
 def get_conv_blocks(b: int, h: int, w: int, c: int, n: int, kernel: int,
@@ -252,6 +291,7 @@ def get_conv_blocks(b: int, h: int, w: int, c: int, n: int, kernel: int,
     key = ("conv", b, h, w, c, n, kernel, stride, _coeff_sig(coeffs), mode,
            bool(interpret), backend, tuple(depths))
     if key in _CACHE:
+        default_registry().counter("autotune.cache_hit").inc()
         return _CACHE[key]["best"]
     if not enabled(enable):
         _log_disabled_defaults("conv", backend, default)
@@ -274,9 +314,12 @@ def get_conv_blocks(b: int, h: int, w: int, c: int, n: int, kernel: int,
                                pipeline_depth=depth, interpret=interpret)
 
     dx = len(coeffs[0])
-    cands = conv_candidates(b, ho, wo, n, kernel * c, dx=dx,
+    kc = kernel * c
+    cands = conv_candidates(b, ho, wo, n, kc, dx=dx,
                             depths=tuple(depths)) or [(8, 128, 0)]
-    return autotune(key, cands, run, iters=iters)["best"]
+    return autotune(key, cands, run, iters=iters,
+                    vmem=lambda cd: conv_vmem_bytes(
+                        cd[0], wo, kc, cd[1], dx=dx, depth=cd[2]))["best"]
 
 
 # ---------------------------------------------------------------------------

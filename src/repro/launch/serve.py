@@ -61,11 +61,21 @@ class FrontDoor:
     never convert.
     """
 
-    def __init__(self, lockstep: bool = False, **engines):
+    def __init__(self, lockstep: bool = False, tracer=None, registry=None,
+                 **engines):
+        """``tracer``/``registry`` are the observability knobs
+        (DESIGN.md §13): the tracer gets this door attached as its clock
+        root — each engine's track is labeled by its registration name
+        and scaled by its ``tick_cost`` so every stamp in the export
+        lands on the door's shared virtual clock; the registry receives
+        the door's latency/health views (``None`` = process default).
+        Neither touches the schedule (``tracer=None`` is bit-for-bit
+        free)."""
         if not engines:
             raise ValueError("FrontDoor needs at least one engine")
         self.engines = engines
         self.lockstep = lockstep
+        self.tracer = tracer
         self.tick = 0
         self.completed: list[tuple[str, object]] = []
         self.down: dict[str, str] = {}  # engine name -> failure reason
@@ -81,6 +91,23 @@ class FrontDoor:
                                  f"everywhere; engine {name!r} declares "
                                  f"{cost}")
             self._costs[name] = cost
+        if tracer is not None:
+            tracer.attach(self, "door")
+            for name, engine in engines.items():
+                engine.tracer = tracer
+                tracer.label(engine, name)
+                tracer.set_scale(engine, self._costs[name])
+                # replica pools fan events out from their replicas, which
+                # tick on the pool's cadence — same scale
+                for k, rep in enumerate(getattr(engine, "replicas", ())):
+                    rep.tracer = tracer
+                    tracer.label(rep, f"{name}[{k}]")
+                    tracer.set_scale(rep, self._costs[name])
+        from repro.obs.metrics import default_registry
+
+        reg = registry if registry is not None else default_registry()
+        self.metrics_scope = reg.register_component(
+            self, {"latency": self.latency_summary, "health": self.health})
         # Ready-event queue: (due door-tick, registration index).  An
         # engine first fires once its cost is paid, i.e. at tick ==
         # tick_cost; heap order + index tie-break keeps the schedule
@@ -144,6 +171,10 @@ class FrontDoor:
             for name in self._order:
                 if name not in self.down:
                     self._step_engine(name, out)
+            if self.tracer is not None:
+                self.tracer.tick_span(self, "door_tick", self.tick, 1, 0,
+                                      fired=len(self._order) - len(self.down),
+                                      finished=len(out))
             self.completed.extend(out)
             return out
         fired: list[int] = []
@@ -155,6 +186,9 @@ class FrontDoor:
                 continue
             if self._step_engine(name, out):
                 heapq.heappush(self._due, (self.tick + self._costs[name], ix))
+        if self.tracer is not None and fired:
+            self.tracer.tick_span(self, "door_tick", self.tick, 1, 0,
+                                  fired=len(fired), finished=len(out))
         self.completed.extend(out)
         return out
 

@@ -1,0 +1,42 @@
+"""Observability subsystem: deterministic tick-domain tracing, the
+unified metrics registry, and structured logging (DESIGN.md §13).
+
+This layer never imports the serving stack it instruments — components
+take a ``tracer=`` knob and publish views into the registry, so the
+dependency arrow points serving → obs only.
+"""
+from repro.obs.log import SCHEMA_VERSION, format_record, structured
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    MetricsRegistry,
+    TickHistogram,
+    counted_lru_cache,
+    default_registry,
+    tick_percentiles,
+)
+from repro.obs.trace import (
+    EVENT_NAMES,
+    REQUEST_TID_BASE,
+    TERMINAL_EVENTS,
+    Tracer,
+    validate_trace_events,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "format_record",
+    "structured",
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "TickHistogram",
+    "counted_lru_cache",
+    "default_registry",
+    "tick_percentiles",
+    "EVENT_NAMES",
+    "REQUEST_TID_BASE",
+    "TERMINAL_EVENTS",
+    "Tracer",
+    "validate_trace_events",
+]

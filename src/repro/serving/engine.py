@@ -27,7 +27,6 @@ config hit the jit compile cache instead of re-tracing.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.families import get_family, validate_slot_layout
+from repro.obs.metrics import counted_lru_cache
 from repro.serving.scheduler import ScheduledRequest, SlotEngine
 
 
@@ -76,14 +76,16 @@ def _jit_step(fn, cfg, mesh, batch, max_len, n_vec_args):
                    out_shardings=(row, ss))
 
 
-@functools.lru_cache(maxsize=None)
+@counted_lru_cache("decode_step")
 def _decode_step_for(cfg: ModelConfig, mesh=None, batch: int = 0,
                      max_len: int = 0):
     """One-token decode step, jitted once per (config, mesh).
 
     ``params`` rides as a traced argument (not a closure) so every
     caller — ``greedy_generate``, every ``ServeEngine`` on this config —
-    shares one compilation.
+    shares one compilation.  The cache is metered
+    (``compile_cache.decode_step.hits``/``.misses`` in the metrics
+    registry) so a re-trace-per-engine regression is visible.
     """
     family = get_family(cfg)
 
@@ -94,7 +96,7 @@ def _decode_step_for(cfg: ModelConfig, mesh=None, batch: int = 0,
     return _jit_step(run, cfg, mesh, batch, max_len, 1)
 
 
-@functools.lru_cache(maxsize=None)
+@counted_lru_cache("chunk_step")
 def _chunk_step_for(cfg: ModelConfig, chunk: int, mesh=None, batch: int = 0,
                     max_len: int = 0):
     """Shape-stable chunked-prefill step: advance slot ``i`` by

@@ -123,11 +123,25 @@ class FaultInjector:
     the chaos bench's non-faulted completion floor reads it as the
     conservative denominator)."""
 
-    def __init__(self, plan: FaultPlan = SMOKE_PLAN):
+    def __init__(self, plan: FaultPlan = SMOKE_PLAN, registry=None):
         self.plan = plan
         self.counts = {"launch": 0, "nan": 0, "slow": 0, "stuck": 0}
         self.poisoned_uids: set = set()
         self._stuck_uids: set = set()
+        from repro.obs.metrics import default_registry
+
+        reg = registry if registry is not None else default_registry()
+        reg.register_component(self, {"faults": self.summary})
+
+    def _trace(self, engine, kind: str, **args) -> None:
+        """Record an ``inject`` instant on the wrapped engine's trace
+        track (DESIGN.md §13.1).  Injection *decisions* are pure
+        functions of (seed, kind, tick/uid) — the trace only witnesses
+        them, so tracing never perturbs the fault schedule."""
+        tr = getattr(engine, "tracer", None)
+        if tr is not None:
+            tr.tick_instant(engine, "inject", engine.tick, 0,
+                            kind=kind, **args)
 
     def _draw(self, *key: int) -> float:
         seq = np.random.SeedSequence(
@@ -149,6 +163,7 @@ class FaultInjector:
         p = self.plan
         if p.slow_rate and self._draw(_SLOW, engine.tick, attempt) < p.slow_rate:
             self.counts["slow"] += 1
+            self._trace(engine, "slow", attempt=attempt)
             time.sleep(p.slow_s)
         hit = engine.tick in p.launch_error_ticks or (
             p.launch_error_rate
@@ -157,6 +172,8 @@ class FaultInjector:
             slot, req = self._victim(active, _LAUNCH, engine.tick, attempt)
             self.counts["launch"] += 1
             self.poisoned_uids.add(getattr(req, "uid", None))
+            self._trace(engine, "launch", slot=slot,
+                        uid=getattr(req, "uid", None), attempt=attempt)
             raise InjectedLaunchError(slot, engine.tick)
 
     def post_launch(self, engine, active: list, result):
@@ -171,6 +188,7 @@ class FaultInjector:
         slot, req = self._victim(active, _NAN, engine.tick)
         self.counts["nan"] += 1
         self.poisoned_uids.add(getattr(req, "uid", None))
+        self._trace(engine, "nan", slot=slot, uid=getattr(req, "uid", None))
         return _corrupt_slot_row(result, slot, engine.n_slots)
 
     def holds(self, engine, req) -> bool:
@@ -185,6 +203,7 @@ class FaultInjector:
             self._stuck_uids.add(uid)
             self.counts["stuck"] += 1
             self.poisoned_uids.add(uid)
+            self._trace(engine, "stuck", uid=uid)
         return bool(stuck)
 
     def summary(self) -> dict:

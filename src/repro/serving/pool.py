@@ -30,6 +30,7 @@ pool (exercised on the CI 8-virtual-device lane).
 """
 from __future__ import annotations
 
+from repro.obs.metrics import default_registry
 from repro.serving.scheduler import (
     ADMITTED,
     SlotEngine,
@@ -42,7 +43,13 @@ class ReplicaPool:
     """N same-modality `SlotEngine` replicas behind least-loaded
     dispatch; see module docstring."""
 
-    def __init__(self, *replicas: SlotEngine):
+    def __init__(self, *replicas: SlotEngine, tracer=None, registry=None):
+        """``tracer``/``registry``: observability knobs (DESIGN.md §13).
+        The tracer records a ``dispatch`` instant per submission (chosen
+        replica + load score); when the pool sits behind a traced
+        `FrontDoor` the door propagates its tracer and clock scale to
+        the pool *and* every replica, so an explicit ``tracer`` here is
+        only for standalone pools.  Both are schedule-neutral."""
         if not replicas:
             raise ValueError("ReplicaPool needs at least one replica")
         want = getattr(replicas[0], "request_type", None)
@@ -61,9 +68,17 @@ class ReplicaPool:
         self.replicas = list(replicas)
         self.request_type = want
         self.tick_cost = cost
+        self.tracer = tracer
+        if tracer is not None:  # standalone traced pool: wire replicas
+            for ix, r in enumerate(self.replicas):
+                r.tracer = tracer
+                tracer.label(r, f"replica[{ix}]")
         self.tick = 0
         self.completed: list = []  # pool-level merged completion order
         self.down: dict[int, str] = {}  # replica index -> failure reason
+        reg = registry if registry is not None else default_registry()
+        self.metrics_scope = reg.register_component(
+            self, {"latency": self.latency_summary, "health": self.health})
 
     # ------------------------------------------------------- dispatch
 
@@ -87,11 +102,19 @@ class ReplicaPool:
         least-loaded live replica (or replica 0 when all are down), so
         the request lands on exactly one ledger."""
         order = self._dispatch_order()
+        chosen = None
         for ix in order:
             if self.replicas[ix].admission_probe(req) == ADMITTED:
-                return self.replicas[ix].submit(req)
-        fallback = self.replicas[order[0] if order else 0]
-        return fallback.submit(req)
+                chosen = ix
+                break
+        if chosen is None:
+            chosen = order[0] if order else 0
+        if self.tracer is not None:
+            self.tracer.tick_instant(
+                self, "dispatch", self.tick, 0,
+                uid=getattr(req, "uid", None), replica=chosen,
+                score=self.load_score(chosen), probed=len(order))
+        return self.replicas[chosen].submit(req)
 
     # ------------------------------------------------------- tick loop
 

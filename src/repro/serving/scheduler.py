@@ -56,6 +56,8 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import default_registry
+
 #: Explicit admission statuses ``submit`` returns — overload is
 #: backpressure the caller can see, never a silent drop.
 ADMITTED = "admitted"
@@ -163,14 +165,25 @@ def tick_percentiles(values: Sequence[float]) -> tuple[float, float, float]:
             float(np.percentile(arr, 99)))
 
 
-def _undrained_counts(engine) -> tuple[int, int]:
-    """(queued, occupied-slot) counts across an engine or a front door."""
+def _uids(requests) -> list:
+    return [getattr(r, "uid", None) for r in requests]
+
+
+def _undrained_report(engine, name: str = "engine") -> list[tuple]:
+    """Per-ledger undrained detail across an engine or a front door:
+    ``(ledger name, queued uids, occupied-slot uids)`` triples, one per
+    leaf engine (front doors report each registered engine under its
+    registration key)."""
     subs = getattr(engine, "engines", None)
     if subs is not None:  # multi-engine front door
-        pairs = [_undrained_counts(e) for e in subs.values()]
-        return sum(q for q, _ in pairs), sum(o for _, o in pairs)
-    return (len(getattr(engine, "queue", ())),
-            sum(s is not None for s in getattr(engine, "slots", ())))
+        out: list[tuple] = []
+        for sub, e in subs.items():
+            out.extend(_undrained_report(e, sub))
+        return out
+    queued = _uids(getattr(engine, "queue", ()))
+    occupied = _uids(s for s in getattr(engine, "slots", ())
+                     if s is not None)
+    return [(name, queued, occupied)]
 
 
 def drive(engine, requests: Sequence | None = None,
@@ -182,10 +195,12 @@ def drive(engine, requests: Sequence | None = None,
     front-door runs replay traffic with identical semantics.
 
     Stopping at ``max_ticks`` with traffic still pending is never
-    silent: the undrained counts are reported via ``RuntimeWarning``
-    (``on_undrained="warn"``, the default) or raised
-    (``on_undrained="raise"``) — a truncated replay that looks drained
-    is how deadlocks hide.
+    silent: the message names every stranded request — per-ledger
+    undrained counts *and* the offending uids, per engine behind a front
+    door — via ``RuntimeWarning`` (``on_undrained="warn"``, the default)
+    or raised (``on_undrained="raise"``).  A truncated replay that looks
+    drained is how deadlocks hide; a count without uids is a deadlock an
+    operator cannot chase.
     """
     pending = sorted(requests or [], key=lambda r: r.arrival_tick)
     ticks = 0
@@ -195,10 +210,17 @@ def drive(engine, requests: Sequence | None = None,
         engine.step()
         ticks += 1
     if pending or engine.busy():
-        queued, occupied = _undrained_counts(engine)
+        report = _undrained_report(engine)
+        queued = sum(len(q) for _, q, _ in report)
+        occupied = sum(len(o) for _, _, o in report)
+        detail = "; ".join(
+            f"{name}: queued={len(q)} uids={q}, occupied={len(o)} uids={o}"
+            for name, q, o in report if q or o)
         msg = (f"drive() stopped at max_ticks={max_ticks} with traffic "
-               f"undrained: {len(pending)} arrivals unsubmitted, "
-               f"{queued} queued, {occupied} slots occupied")
+               f"undrained: {len(pending)} arrivals unsubmitted "
+               f"(uids {_uids(pending)}), {queued} queued, "
+               f"{occupied} slots occupied"
+               + (f" [{detail}]" if detail else ""))
         if on_undrained == "raise":
             raise RuntimeError(msg)
         warnings.warn(msg, RuntimeWarning, stacklevel=2)
@@ -236,7 +258,9 @@ class SlotEngine:
                  launch_retries: int = 2,
                  retry_backoff_s: float = 0.0,
                  tick_cost: int = 1,
-                 faults=None):
+                 faults=None,
+                 tracer=None,
+                 registry=None):
         """Fault-tolerance knobs (all off by default — the core without
         them is tick-for-tick the pre-§10 machine):
 
@@ -259,6 +283,17 @@ class SlotEngine:
         The engine itself never reads it — its own clock stays
         one-per-step — and the door converts tick-denominated ledgers
         onto the shared clock exactly once.
+
+        Observability knobs (DESIGN.md §13, both schedule-neutral):
+
+        ``tracer``      an `obs.Tracer` recording this engine's request
+                        lifecycles and tick/launch spans.  ``None`` (the
+                        default) or a disabled tracer is bit-for-bit
+                        free — every hook sits behind a ``None`` check
+                        and no hook touches schedule state.
+        ``registry``    the `obs.MetricsRegistry` this engine publishes
+                        its latency/health views and tick histograms
+                        into; ``None`` means the process-wide default.
         """
         if isinstance(evict, str):
             evict = EVICTION_POLICIES[evict]
@@ -276,6 +311,14 @@ class SlotEngine:
         self.retry_backoff_s = retry_backoff_s
         self.tick_cost = tick_cost
         self.faults = faults
+        self.tracer = tracer
+        self.registry = registry if registry is not None else default_registry()
+        self.metrics_scope = self.registry.register_component(
+            self, {"latency": self.latency_summary, "health": self.health})
+        self._hist_queue = self.registry.tick_histogram(
+            f"{self.metrics_scope}.queue_ticks")
+        self._hist_serve = self.registry.tick_histogram(
+            f"{self.metrics_scope}.serve_ticks")
         self.tick = 0
         self.queue: list = []
         self.slots: list = [None] * n_slots
@@ -349,11 +392,15 @@ class SlotEngine:
         submission; calling ``submit`` directly means the request exists
         as of the current tick."""
         req.submitted_tick = self.tick
+        tr = self.tracer
+        if tr is not None:
+            tr.tick_instant(self, "submit", self.tick, tr.req_tid(req),
+                            uid=getattr(req, "uid", None))
         if self.halted is not None:
-            self._reject(req)
+            self._reject(req, REJECTED_HALTED)
             return REJECTED_HALTED
         if self.admission == "deadline" and self._projected_miss(req):
-            self._reject(req)
+            self._reject(req, REJECTED_DEADLINE)
             return REJECTED_DEADLINE
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             victim = self._evict(self.queue, req)
@@ -361,16 +408,26 @@ class SlotEngine:
             victim.evicted_tick = self.tick
             self.evicted.append(victim)
             self.stats["evictions"] += 1
+            if tr is not None:
+                vid = tr.req_tid(victim)
+                tr.tick_span(self, "queue", victim.submitted_tick,
+                             victim.queue_ticks, vid)
+                tr.tick_instant(self, "evict", self.tick, vid,
+                                uid=getattr(victim, "uid", None))
             if victim is req:
                 return REJECTED_QUEUE
         self.queue.append(req)
         return ADMITTED
 
-    def _reject(self, req) -> None:
+    def _reject(self, req, reason: str = "rejected") -> None:
         req.evicted = True
         req.evicted_tick = self.tick
         self.rejected.append(req)
         self.stats["rejections"] += 1
+        if self.tracer is not None:
+            self.tracer.tick_instant(
+                self, "reject", self.tick, self.tracer.req_tid(req),
+                uid=getattr(req, "uid", None), status=reason)
 
     def admission_probe(self, req) -> str:
         """Non-mutating preview of the status ``submit`` would return
@@ -427,12 +484,19 @@ class SlotEngine:
         return self.tick + wait + est > req.deadline_tick
 
     def _admit(self) -> None:
+        tr = self.tracer
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self._on_admit(i, req)
                 self.slots[i] = req
                 req.served_tick = self.tick
+                if tr is not None:
+                    tid = tr.req_tid(req)
+                    tr.tick_span(self, "queue", req.submitted_tick,
+                                 req.queue_ticks, tid)
+                    tr.tick_instant(self, "admit", self.tick, tid,
+                                    uid=getattr(req, "uid", None), slot=i)
 
     def _fail(self, slot: int | None, req, reason: str) -> None:
         """Quarantine ``req`` onto the failed ledger; recycle its slot."""
@@ -443,6 +507,17 @@ class SlotEngine:
         req.finished_tick = self.tick
         self.failed.append(req)
         self.stats["failures"] += 1
+        tr = self.tracer
+        if tr is not None:
+            tid = tr.req_tid(req)
+            if req.served_tick >= 0:  # failed while holding a slot
+                tr.tick_span(self, "serve", req.served_tick,
+                             req.serve_ticks, tid)
+            else:  # failed while still queued (engine halt)
+                tr.tick_span(self, "queue", req.submitted_tick,
+                             self.tick - req.submitted_tick, tid)
+            tr.tick_instant(self, "fail", self.tick, tid,
+                            uid=getattr(req, "uid", None), reason=reason)
 
     def _watchdog(self) -> None:
         """Evict occupants stuck past ``max_serve_ticks``: the slot is
@@ -453,6 +528,10 @@ class SlotEngine:
         for i, req in enumerate(self.slots):
             if req is not None and req.serve_ticks >= self.max_serve_ticks:
                 self.stats["watchdog_evictions"] += 1
+                if self.tracer is not None:
+                    self.tracer.tick_instant(
+                        self, "watchdog", self.tick, 0,
+                        uid=getattr(req, "uid", None), slot=i)
                 self._fail(i, req, "watchdog")
 
     def _attempt_launch(self, active: list, attempt: int):
@@ -478,12 +557,25 @@ class SlotEngine:
         act = list(active)
         quarantined: list = []
         attempt = 0
+        tr = self.tracer
         while act:
             try:
-                return self._attempt_launch(act, attempt), act, quarantined
+                result = self._attempt_launch(act, attempt), act, quarantined
+                if tr is not None:
+                    tr.tick_span(self, "launch", self.tick, 1, 0,
+                                 attempt=attempt, n_active=len(act), ok=True)
+                return result
             except Exception as exc:  # noqa: BLE001 — containment boundary
                 attempt += 1
                 self.stats["launch_faults"] += 1
+                if tr is not None:
+                    tr.tick_span(self, "launch", self.tick, 1, 0,
+                                 attempt=attempt - 1, n_active=len(act),
+                                 ok=False)
+                    tr.tick_instant(self, "launch_fault", self.tick, 0,
+                                    error=type(exc).__name__,
+                                    slot=getattr(exc, "slot", None),
+                                    attempt=attempt - 1)
                 self._on_launch_fault(exc)
                 if attempt <= self.launch_retries:
                     if self.retry_backoff_s:
@@ -491,6 +583,10 @@ class SlotEngine:
                     continue
                 slot = getattr(exc, "slot", None)
                 hit = [(i, r) for i, r in act if i == slot]
+                if tr is not None:
+                    for i, r in (hit or act):
+                        tr.tick_instant(self, "quarantine", self.tick, 0,
+                                        uid=getattr(r, "uid", None), slot=i)
                 quarantined.extend(hit or act)
                 act = [] if not hit else [(i, r) for i, r in act if i != slot]
                 attempt = 0
@@ -516,6 +612,7 @@ class SlotEngine:
         result, served, quarantined = self._launch_contained(active)
         wall_us = (time.perf_counter() - t0) * 1e6
 
+        tr = self.tracer
         for i, req in quarantined:
             req.serve_ticks += 1
             req.launch_wall_us += wall_us
@@ -529,6 +626,9 @@ class SlotEngine:
                 if self.faults is not None and self.faults.holds(self, req):
                     continue  # injected stuck occupant: the watchdog's prey
                 if not self._validate(i, req, result):
+                    if tr is not None:
+                        tr.tick_instant(self, "validate_fail", self.tick, 0,
+                                        uid=getattr(req, "uid", None), slot=i)
                     self._fail(i, req, "nonfinite")
                     continue
                 if self._absorb(i, req, result):
@@ -536,12 +636,26 @@ class SlotEngine:
                     self.completed.append(req)
                     self.slots[i] = None
                     finished.append(req)
+                    self._hist_queue.observe(req.queue_ticks)
+                    self._hist_serve.observe(req.serve_ticks)
+                    if tr is not None:
+                        tid = tr.req_tid(req)
+                        tr.tick_span(self, "serve", req.served_tick,
+                                     req.serve_ticks, tid)
+                        tr.tick_instant(self, "complete", self.tick, tid,
+                                        uid=getattr(req, "uid", None),
+                                        serve_ticks=req.serve_ticks)
             self.stats["launches"] += 1
             self.stats["wall_us"] += wall_us
 
         self.stats["served"] += len(finished)
         self.stats["slot_ticks"] += self.n_slots
         self.stats["busy_slot_ticks"] += len(active)
+        if tr is not None:
+            wall = {"wall_us": round(wall_us, 1)} if tr.wall else {}
+            tr.tick_span(self, "engine_tick", self.tick, 1, 0,
+                         n_active=len(active), finished=len(finished),
+                         **wall)
         return finished
 
     def busy(self) -> bool:
@@ -556,6 +670,9 @@ class SlotEngine:
         return ``REJECTED_HALTED``."""
         self.halted = reason or "halted"
         tag = f"halt:{self.halted}"
+        if self.tracer is not None:
+            self.tracer.tick_instant(self, "halt", self.tick, 0,
+                                     reason=self.halted)
         for i, req in enumerate(self.slots):
             if req is not None:
                 self._fail(i, req, tag)

@@ -109,4 +109,7 @@ class SessionEngine(ServeEngine):
         req.turn += 1
         req.outputs.append([])
         self._slot_cursor[i] = 0
+        if self.tracer is not None:
+            self.tracer.tick_instant(self, "session_turn", self.tick, 0,
+                                     uid=req.uid, turn=req.turn, slot=i)
         return False

@@ -29,7 +29,6 @@ it — enough to read queueing delay and batch amortization separately.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +44,7 @@ from repro.core.bn_fold import deploy_params
 from repro.core.pixel_model import PixelModel
 from repro.core.quant import QuantSpec, quantize_deploy
 from repro.models.mobilenetv2 import MNV2Config, apply_mnv2
+from repro.obs.metrics import counted_lru_cache
 from repro.parallel import vision_plan_for
 from repro.parallel.sharding_utils import batch_shardings
 from repro.serving.scheduler import ScheduledRequest, SlotEngine
@@ -93,14 +93,16 @@ def _jit_forward(forward, cfg: MNV2Config, mesh: Mesh | None,
                    out_shardings=rep)
 
 
-@functools.lru_cache(maxsize=None)
+@counted_lru_cache("deploy_forward")
 def _deploy_forward_for(cfg: MNV2Config, mesh: Mesh | None = None,
                         batch: int | None = None, impl: str | None = None):
     """Deploy-mode forward, jitted once per (config, mesh, conv impl) —
     params, BN state and the folded deploy tree ride as traced arguments
-    so every engine on this config shares one compilation.  ``impl``
-    selects the stem conv path; the fault-degradation ladder requests
-    ``"patches"`` (the reference conv) after repeated kernel faults."""
+    so every engine on this config shares one compilation (metered:
+    ``compile_cache.deploy_forward.*`` in the metrics registry).
+    ``impl`` selects the stem conv path; the fault-degradation ladder
+    requests ``"patches"`` (the reference conv) after repeated kernel
+    faults."""
     return _jit_forward(_make_forward(cfg, None, impl), cfg, mesh, batch)
 
 

@@ -47,7 +47,6 @@ vision plan while params/deploy/head trees replicate.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +70,7 @@ from repro.models.mobilenetv2 import (
     apply_mnv2_backbone,
     apply_mnv2_stem,
 )
+from repro.obs.metrics import counted_lru_cache
 from repro.parallel import vision_plan_for
 from repro.parallel.sharding_utils import batch_shardings
 from repro.serving.scheduler import ScheduledRequest, SlotEngine
@@ -140,7 +140,7 @@ class StreamRequest(ScheduledRequest):
         return self.launch_wall_us / self.frames_done if self.frames_done else 0.0
 
 
-@functools.lru_cache(maxsize=None)
+@counted_lru_cache("stream_forward")
 def _stream_forward_for(cfg: MNV2Config, dcfg: DetectConfig,
                         mesh: Mesh | None, batch: int,
                         impl: str | None = None,
@@ -308,6 +308,13 @@ class StreamEngine(SlotEngine):
         self._trackers: list[Tracker | None] = [None] * self.n_slots
         self._fwd = _stream_forward_for(cfg, det_cfg, mesh, self.n_slots,
                                         stem_impl, stem_path)
+        # stream-specific registry views alongside the core's
+        # latency/health (DESIGN.md §13.2): the aggregate stream summary
+        # and the per-slot delta-gate ledgers
+        self.registry.register_view(self.metrics_scope, "stream",
+                                    self.stream_summary)
+        self.registry.register_view(self.metrics_scope, "gates",
+                                    self._gate_ledgers)
 
     # ------------------------------------------------- adapter hooks
 
@@ -389,6 +396,13 @@ class StreamEngine(SlotEngine):
         return req.frames_done >= req.n_frames
 
     # ------------------------------------------------------ reporting
+
+    def _gate_ledgers(self) -> list:
+        """Per-slot delta-gate ledger summaries (None = free slot) — the
+        registry view that puts the readout-bandwidth accounting on the
+        same snapshot surface as the latency ledgers."""
+        return [None if g is None else g.ledger.summary()
+                for g in self._gates]
 
     def health(self) -> dict:
         """Core health report plus the stream-specific degradation
